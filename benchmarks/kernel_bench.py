@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks: wall time of the force kernels' reference paths
+on CPU (the Pallas kernels target TPU; interpret mode is not a perf path)
+and of one smoke-model train step per architecture."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def force_kernels(small: bool = False):
+    from repro.kernels.nbody.ref import nbody_repulsion_ref
+    from repro.kernels.neighbor_force.ref import neighbor_repulsion_ref
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in ((1024, 4096) if small else (1024, 4096, 16384)):
+        pos = jnp.asarray(rng.random((n, 2)), jnp.float32)
+        mass = jnp.ones((n,), jnp.float32)
+        vmask = jnp.ones((n,), bool)
+        f = jax.jit(lambda p, m, v: nbody_repulsion_ref(p, m, v, 1.0, 1.0, 1e-3))
+        if n <= 4096:
+            dt = _time(f, pos, mass, vmask)
+            rows.append((f"nbody_ref_n{n}", dt * 1e6, f"pairs={n*n}"))
+        K = 64
+        nbr = jnp.asarray(rng.integers(0, n, (n, K)), jnp.int32)
+        nmask = jnp.ones((n, K), bool)
+        g = jax.jit(lambda p, m, i, k, v:
+                    neighbor_repulsion_ref(p, m, i, k, v, 1.0, 1.0, 1e-3))
+        dt = _time(g, pos, mass, nbr, nmask, vmask)
+        rows.append((f"neighbor_ref_n{n}_k{K}", dt * 1e6, f"gathers={n*K}"))
+    for name, us, d in rows:
+        print(f"  kernel {name:24s} {us:10.1f} us  {d}", flush=True)
+    return rows
+
+
+def arch_steps(small: bool = True):
+    from repro.configs import list_archs, get_smoke_config
+    from repro.models import loss_fn, init_params
+    rows = []
+    rng = np.random.default_rng(0)
+    for arch in list_archs():
+        cfg = get_smoke_config(arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 64)),
+                                       jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 64)),
+                                       jnp.int32)}
+        if cfg.enc_layers:
+            batch["frames"] = jnp.zeros((2, 64, cfg.d_model), jnp.bfloat16)
+        if cfg.modality == "vlm":
+            batch["patches"] = jnp.zeros((2, 16, cfg.d_model), jnp.bfloat16)
+        step = jax.jit(jax.grad(lambda p, b: loss_fn(p, cfg, b)[0]))
+        dt = _time(lambda p, b: jax.tree.leaves(step(p, b))[0], params, batch)
+        rows.append((f"grad_step_{arch}", dt * 1e6, "smoke-config"))
+        print(f"  arch {arch:24s} grad step {dt*1e6:10.0f} us", flush=True)
+    return rows
+
+
+def run(small: bool = False):
+    return force_kernels(small) + arch_steps(small)
+
+
+def csv_rows(rows):
+    return rows

@@ -1,0 +1,36 @@
+"""Fault-tolerance example: train, kill mid-run (simulated), auto-resume
+from the newest valid checkpoint — including a corrupted-checkpoint skip.
+
+    PYTHONPATH=src python examples/train_resume.py
+"""
+import os
+import shutil
+import tempfile
+
+from repro.launch.train import main
+
+
+def run():
+    ckpt = tempfile.mkdtemp(prefix="repro_resume_")
+    print(f"== phase 1: train 40 steps, checkpoint every 20 → {ckpt} ==")
+    main(["--arch", "internlm2-1.8b", "--smoke", "--steps", "40",
+          "--seq", "128", "--batch", "4", "--ckpt", ckpt,
+          "--ckpt-every", "20", "--log-every", "20"])
+
+    # simulate a node failure that corrupted the newest checkpoint
+    newest = max(d for d in os.listdir(ckpt) if d.startswith("step_"))
+    victim = os.path.join(ckpt, newest, "manifest.json")
+    print(f"== simulating corruption: truncating {victim} ==")
+    with open(victim, "w") as f:
+        f.write("{corrupt")
+
+    print("== phase 2: resume (skips the corrupt checkpoint, falls back) ==")
+    main(["--arch", "internlm2-1.8b", "--smoke", "--steps", "60",
+          "--seq", "128", "--batch", "4", "--ckpt", ckpt,
+          "--resume", "auto", "--log-every", "20"])
+    shutil.rmtree(ckpt, ignore_errors=True)
+    print("resume-after-failure demo complete")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,15 @@
+"""Config registry: one module per assigned architecture (+ paper presets).
+
+``get_config(name)`` returns the exact published config; ``get_smoke_config``
+returns the reduced same-family config used by CPU smoke tests.
+"""
+from repro.configs.base import (ArchConfig, MoEConfig, SSMConfig, ShapeCell,
+                                SHAPES, cells_for, get_config,
+                                get_smoke_config, list_archs)
+
+# importing the modules populates the registry
+from repro.configs import (gemma_2b, starcoder2_15b, internlm2_1_8b,
+                           starcoder2_7b, seamless_m4t_medium, internvl2_76b,
+                           mamba2_1_3b, deepseek_moe_16b,
+                           granite_moe_3b_a800m, jamba_v0_1_52b)
+from repro.configs import multigila as multigila_presets

@@ -1,0 +1,14 @@
+"""internlm2-1.8b [dense] — 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92544, SwiGLU, RMSNorm, RoPE. [arXiv:2403.17297; hf]"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="internlm2-1.8b", family="dense", n_layers=24, d_model=2048,
+        n_heads=16, n_kv_heads=8, d_ff=8192, vocab=92544,
+        activation="swiglu", norm="rmsnorm"),
+    smoke=ArchConfig(
+        name="internlm2-1.8b-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+        activation="swiglu", norm="rmsnorm"),
+)

@@ -1,0 +1,11 @@
+# The paper's primary contribution: Multi-GiLA, a distributed multilevel
+# force-directed layout algorithm, adapted from the Giraph/TLAV paradigm to
+# TPU-native JAX (dense supersteps + shard_map distribution).
+from repro.core.multilevel import (LayoutConfig, LayoutStats, multigila_layout,
+                                   layout_component, build_hierarchy,
+                                   connected_components)
+from repro.core.solar_merger import (run_merger, next_level, init_state,
+                                     MergerState, LevelInfo,
+                                     UNASSIGNED, SUN, PLANET, MOON)
+from repro.core.solar_placer import solar_placer
+from repro.core import gila, schedule, pruning

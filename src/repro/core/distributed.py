@@ -1,0 +1,331 @@
+"""shard_map distribution of the layout supersteps over the production mesh.
+
+Decomposition (DESIGN.md §4):
+  * per-vertex state is sharded over the flattened vertex axes
+    VTX = ("pod", "data") — or ("data",) on a single pod;
+  * the all-pairs repulsion partner dimension is sharded over "model",
+    giving a 2-D decomposition of the interaction matrix: device (v, m)
+    computes rows of its vertex block against column chunk m, then psums
+    partials over "model";
+  * edge lists are pre-sorted by destination shard (Spinner order) so each
+    device's segment-sum lands in its own vertex block; source positions
+    come from an all_gather over VTX (8 bytes/vertex — the same per-round
+    broadcast volume the paper's Giraph workers pay), or from a halo
+    exchange of only the boundary vertices (optimized variant, §Perf).
+
+Every function here is pure SPMD and lowers on the 512-chip mesh; the
+dry-run rows for the layout engine come from `layout_step_spec` below.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def vtx_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    s = 1
+    for n in (names if isinstance(names, tuple) else (names,)):
+        s *= mesh.shape[n]
+    return s
+
+
+# -- exact N-body, 2-D decomposed ---------------------------------------------
+
+def sharded_nbody(mesh: Mesh, n_pad: int):
+    """Returns a jitted f(pos[n_pad,2], w[n_pad]) → forces, 2-D decomposed."""
+    VTX = vtx_axes(mesh)
+    msize = mesh.shape["model"]
+
+    def local(pos_blk, w_blk, params):
+        C, L, md = params[0], params[1], params[2]
+        pos_all = jax.lax.all_gather(pos_blk, VTX, tiled=True)   # [n_pad, 2]
+        w_all = jax.lax.all_gather(w_blk, VTX, tiled=True)       # [n_pad]
+        chunk = n_pad // msize
+        mi = jax.lax.axis_index("model")
+        cpos = jax.lax.dynamic_slice_in_dim(pos_all, mi * chunk, chunk)
+        cw = jax.lax.dynamic_slice_in_dim(w_all, mi * chunk, chunk)
+        dx = pos_blk[:, 0][:, None] - cpos[:, 0][None, :]
+        dy = pos_blk[:, 1][:, None] - cpos[:, 1][None, :]
+        d2 = dx * dx + dy * dy + md * md
+        inv = (C * L * L) * cw[None, :] / d2
+        partial = jnp.stack([jnp.sum(dx * inv, 1), jnp.sum(dy * inv, 1)], 1)
+        return jax.lax.psum(partial, "model")
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(VTX, None), P(VTX), P()),
+                   out_specs=P(VTX, None))
+    return jax.jit(fn)
+
+
+# -- message superstep (attraction / merger push) ------------------------------
+
+def sharded_attraction(mesh: Mesh, n_pad: int, m_pad: int):
+    """f(pos, src, dst_local, emask, ewt, params) → attraction forces.
+
+    Edge arrays are sharded over VTX with ``dst_local`` already offset into
+    the local vertex block (host-side pre-partitioning by destination).
+    """
+    VTX = vtx_axes(mesh)
+    vsize = _axis_size(mesh, VTX)
+    n_loc = n_pad // vsize
+
+    def local(pos_blk, src, dst_local, emask, ewt, params):
+        C, L, md = params[0], params[1], params[2]
+        pos_all = jax.lax.all_gather(pos_blk, VTX, tiled=True)
+        pos_all = jnp.concatenate([pos_all, jnp.zeros((1, 2), pos_all.dtype)], 0)
+        ps = pos_all[src]                       # [m_loc, 2] remote reads
+        pd = pos_blk[jnp.clip(dst_local, 0, n_loc - 1)]
+        delta = ps - pd
+        dist = jnp.sqrt(jnp.sum(delta * delta, 1) + md * md)
+        ell = jnp.maximum(ewt, 1e-6) * L
+        f = (dist * dist) / ell
+        vec = jnp.where(emask[:, None], delta / dist[:, None] * f[:, None], 0.0)
+        out = jax.ops.segment_sum(vec, jnp.clip(dst_local, 0, n_loc),
+                                  num_segments=n_loc + 1)
+        return out[:n_loc]
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(VTX, None), P(VTX), P(VTX), P(VTX), P(VTX), P()),
+                   out_specs=P(VTX, None))
+    return jax.jit(fn)
+
+
+def sharded_push_max(mesh: Mesh, n_pad: int):
+    """Distributed merger superstep: broadcast int values, max-combine."""
+    VTX = vtx_axes(mesh)
+    vsize = _axis_size(mesh, VTX)
+    n_loc = n_pad // vsize
+
+    def local(vals_blk, src, dst_local, emask):
+        vals_all = jax.lax.all_gather(vals_blk, VTX, tiled=True)
+        vals_all = jnp.concatenate([vals_all, jnp.full((1,), -1, vals_all.dtype)], 0)
+        msgs = jnp.where(emask, vals_all[src], -1)
+        out = jax.ops.segment_max(msgs, jnp.clip(dst_local, 0, n_loc),
+                                  num_segments=n_loc + 1)
+        return jnp.maximum(out[:n_loc], -1)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(VTX), P(VTX), P(VTX), P(VTX)),
+                   out_specs=P(VTX))
+    return jax.jit(fn)
+
+
+# -- neighbor-list repulsion (fine levels) -------------------------------------
+
+def sharded_neighbor_force(mesh: Mesh, n_pad: int, cap: int):
+    """f(pos, w, nbr_idx[n_pad,cap]) — k-hop repulsion with remote gathers."""
+    VTX = vtx_axes(mesh)
+
+    def local(pos_blk, w_blk, nbr_idx, params):
+        C, L, md = params[0], params[1], params[2]
+        pos_all = jax.lax.all_gather(pos_blk, VTX, tiled=True)
+        w_all = jax.lax.all_gather(w_blk, VTX, tiled=True)
+        pos_all = jnp.concatenate([pos_all, jnp.zeros((1, 2), pos_all.dtype)], 0)
+        w_all = jnp.concatenate([w_all, jnp.zeros((1,), w_all.dtype)], 0)
+        npos = pos_all[nbr_idx]                 # [n_loc, cap, 2]
+        nw = w_all[nbr_idx]
+        delta = pos_blk[:, None, :] - npos
+        d2 = jnp.sum(delta * delta, -1) + md * md
+        inv = (C * L * L) * nw / d2
+        return jnp.sum(delta * inv[:, :, None], axis=1)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(VTX, None), P(VTX), P(VTX, None), P()),
+                   out_specs=P(VTX, None))
+    return jax.jit(fn)
+
+
+# -- full distributed layout step (used by the dry-run) ------------------------
+
+def layout_train_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
+                      mode: str = "neighbor"):
+    """One full distributed GiLA iteration: repulsion + attraction + update.
+
+    Returns (step_fn, input_shardings) suitable for
+    jax.jit(step_fn, in_shardings=...).lower(*specs).
+    """
+    VTX = vtx_axes(mesh)
+    vsize = _axis_size(mesh, VTX)
+    n_loc = n_pad // vsize
+    msize = mesh.shape["model"]
+
+    def local(pos_blk, w_blk, nbr_idx, src, dst_local, emask, ewt, params, temp):
+        C, L, md = params[0], params[1], params[2]
+        pos_all = jax.lax.all_gather(pos_blk, VTX, tiled=True)
+        w_all = jax.lax.all_gather(w_blk, VTX, tiled=True)
+        pos_pad = jnp.concatenate([pos_all, jnp.zeros((1, 2), pos_all.dtype)], 0)
+        w_pad = jnp.concatenate([w_all, jnp.zeros((1,), w_all.dtype)], 0)
+
+        if mode == "exact":
+            chunk = n_pad // msize
+            mi = jax.lax.axis_index("model")
+            cpos = jax.lax.dynamic_slice_in_dim(pos_all, mi * chunk, chunk)
+            cw = jax.lax.dynamic_slice_in_dim(w_all, mi * chunk, chunk)
+            dx = pos_blk[:, 0][:, None] - cpos[:, 0][None, :]
+            dy = pos_blk[:, 1][:, None] - cpos[:, 1][None, :]
+            d2 = dx * dx + dy * dy + md * md
+            inv = (C * L * L) * cw[None, :] / d2
+            rep = jax.lax.psum(
+                jnp.stack([jnp.sum(dx * inv, 1), jnp.sum(dy * inv, 1)], 1),
+                "model")
+        else:
+            # split the neighbor cap over the model axis → 2-D decomposition
+            ccap = cap // msize
+            mi = jax.lax.axis_index("model")
+            nidx = jax.lax.dynamic_slice_in_dim(nbr_idx, mi * ccap, ccap, axis=1)
+            npos = pos_pad[nidx]
+            nw = w_pad[nidx]
+            delta = pos_blk[:, None, :] - npos
+            d2 = jnp.sum(delta * delta, -1) + md * md
+            inv = (C * L * L) * nw / d2
+            rep = jax.lax.psum(jnp.sum(delta * inv[:, :, None], axis=1), "model")
+
+        ps = pos_pad[src]
+        pd = pos_blk[jnp.clip(dst_local, 0, n_loc - 1)]
+        delta = ps - pd
+        dist = jnp.sqrt(jnp.sum(delta * delta, 1) + md * md)
+        f = (dist * dist) / (jnp.maximum(ewt, 1e-6) * L)
+        vec = jnp.where(emask[:, None], delta / dist[:, None] * f[:, None], 0.0)
+        att = jax.ops.segment_sum(vec, jnp.clip(dst_local, 0, n_loc),
+                                  num_segments=n_loc + 1)[:n_loc]
+
+        force = rep + att
+        norm = jnp.sqrt(jnp.sum(force * force, 1) + 1e-12)
+        step = jnp.minimum(norm, temp)
+        return pos_blk + force / norm[:, None] * step[:, None]
+
+    step = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(VTX, None), P(VTX), P(VTX, None), P(VTX), P(VTX), P(VTX),
+                  P(VTX), P(), P()),
+        out_specs=P(VTX, None))
+    shardings = dict(
+        pos=NamedSharding(mesh, P(VTX, None)),
+        w=NamedSharding(mesh, P(VTX)),
+        nbr_idx=NamedSharding(mesh, P(VTX, None)),
+        edge=NamedSharding(mesh, P(VTX)),
+        scalar=NamedSharding(mesh, P()),
+    )
+    return step, shardings
+
+
+def layout_train_step_halo(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
+                           halo: int):
+    """GiLA iteration with HALO EXCHANGE instead of the position all-gather
+    (§Perf hillclimb C — the paper's Spinner-locality insight made explicit).
+
+    With a Spinner partition, almost all k-hop neighbors are shard-local;
+    each device needs only the boundary ("halo") positions of its peers.
+    Host-side preprocessing produces, per device, ``send_idx[P, halo]``
+    (local vertices each peer needs; sentinel-padded) and neighbor lists
+    remapped into [local | halo-slot | sentinel] coordinates. Communication
+    per superstep drops from all-gather(n·12B) to all_to_all(P·halo·12B).
+    """
+    VTX = vtx_axes(mesh)
+    vsize = _axis_size(mesh, VTX)
+    n_loc = n_pad // vsize
+
+    def local(pos_blk, w_blk, nbr_local, send_idx, src_local, dst_local,
+              emask, ewt, params, temp):
+        C, L, md = params[0], params[1], params[2]
+        P_ = send_idx.shape[0]
+        table = jnp.concatenate(
+            [pos_blk, jnp.zeros((1, 2), pos_blk.dtype)], 0)
+        wtab = jnp.concatenate([w_blk, jnp.zeros((1,), w_blk.dtype)], 0)
+        sidx = jnp.clip(send_idx, 0, n_loc)
+        send = jnp.concatenate(
+            [table[sidx], wtab[sidx][..., None]], axis=-1)     # [P, halo, 3]
+        # hierarchical personalized all-to-all over the vertex axes:
+        # peers laid out [pod, data]; exchange the data stage, then pod.
+        shape = tuple(mesh.shape[a] for a in VTX)
+        recv = send.reshape(shape + send.shape[1:])
+        for d, ax in enumerate(VTX):
+            recv = jax.lax.all_to_all(recv, ax, split_axis=d, concat_axis=d)
+        recv = recv.reshape(P_, -1, 3)
+
+        halo_pos = recv[..., :2].reshape(-1, 2)
+        halo_w = recv[..., 2].reshape(-1)
+        full_pos = jnp.concatenate(
+            [pos_blk, halo_pos, jnp.zeros((1, 2), pos_blk.dtype)], 0)
+        full_w = jnp.concatenate([w_blk, halo_w,
+                                  jnp.zeros((1,), w_blk.dtype)], 0)
+
+        npos = full_pos[nbr_local]                  # [n_loc, cap, 2]
+        nw = full_w[nbr_local]
+        delta = pos_blk[:, None, :] - npos
+        d2 = jnp.sum(delta * delta, -1) + md * md
+        inv = (C * L * L) * nw / d2
+        rep = jnp.sum(delta * inv[:, :, None], axis=1)
+
+        ps = full_pos[src_local]
+        pd = pos_blk[jnp.clip(dst_local, 0, n_loc - 1)]
+        delta = ps - pd
+        dist = jnp.sqrt(jnp.sum(delta * delta, 1) + md * md)
+        f = (dist * dist) / (jnp.maximum(ewt, 1e-6) * L)
+        vec = jnp.where(emask[:, None], delta / dist[:, None] * f[:, None], 0.0)
+        att = jax.ops.segment_sum(vec, jnp.clip(dst_local, 0, n_loc),
+                                  num_segments=n_loc + 1)[:n_loc]
+
+        force = rep + att
+        norm = jnp.sqrt(jnp.sum(force * force, 1) + 1e-12)
+        step = jnp.minimum(norm, temp)
+        return pos_blk + force / norm[:, None] * step[:, None]
+
+    step = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(VTX, None), P(VTX), P(VTX, None), P(VTX, None), P(VTX),
+                  P(VTX), P(VTX), P(VTX), P(), P()),
+        out_specs=P(VTX, None))
+    shardings = dict(
+        pos=NamedSharding(mesh, P(VTX, None)),
+        w=NamedSharding(mesh, P(VTX)),
+        nbr_idx=NamedSharding(mesh, P(VTX, None)),
+        send=NamedSharding(mesh, P(VTX, None)),
+        edge=NamedSharding(mesh, P(VTX)),
+        scalar=NamedSharding(mesh, P()),
+    )
+    return step, shardings
+
+
+def layout_halo_specs(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
+                      halo: int):
+    VTX = vtx_axes(mesh)
+    vsize = _axis_size(mesh, VTX)
+    f32, i32 = jnp.float32, jnp.int32
+    return dict(
+        pos=jax.ShapeDtypeStruct((n_pad, 2), f32),
+        w=jax.ShapeDtypeStruct((n_pad,), f32),
+        nbr_local=jax.ShapeDtypeStruct((n_pad, cap), i32),
+        send_idx=jax.ShapeDtypeStruct((vsize * vsize, halo), i32),
+        src_local=jax.ShapeDtypeStruct((m_pad,), i32),
+        dst_local=jax.ShapeDtypeStruct((m_pad,), i32),
+        emask=jax.ShapeDtypeStruct((m_pad,), jnp.bool_),
+        ewt=jax.ShapeDtypeStruct((m_pad,), f32),
+        params=jax.ShapeDtypeStruct((3,), f32),
+        temp=jax.ShapeDtypeStruct((), f32),
+    )
+
+
+def layout_step_specs(n_pad: int, m_pad: int, cap: int):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    f32, i32 = jnp.float32, jnp.int32
+    return dict(
+        pos=jax.ShapeDtypeStruct((n_pad, 2), f32),
+        w=jax.ShapeDtypeStruct((n_pad,), f32),
+        nbr_idx=jax.ShapeDtypeStruct((n_pad, cap), i32),
+        src=jax.ShapeDtypeStruct((m_pad,), i32),
+        dst_local=jax.ShapeDtypeStruct((m_pad,), i32),
+        emask=jax.ShapeDtypeStruct((m_pad,), jnp.bool_),
+        ewt=jax.ShapeDtypeStruct((m_pad,), f32),
+        params=jax.ShapeDtypeStruct((3,), f32),
+        temp=jax.ShapeDtypeStruct((), f32),
+    )

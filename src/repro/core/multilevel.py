@@ -1,0 +1,221 @@
+"""Multi-GiLA — the full multilevel pipeline (paper §3.1).
+
+pruning → (partitioning) → coarsening* → coarsest layout → [placement →
+single-level refinement]* → reinsertion, applied per connected component,
+components packed on a shelf grid at the end.
+
+The same driver powers three engines:
+  * ``multigila``   — the paper's algorithm (distributed-semantics supersteps);
+  * ``centralized`` — FM³ stand-in baseline: identical hierarchy, exact
+                      all-pairs forces and full iteration budget everywhere;
+  * ``flat``        — single-level GiLA baseline (the paper's predecessor [5]).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.graph import PaddedGraph, build_graph, unique_edges
+from repro.core.solar_merger import run_merger, next_level, LevelInfo
+from repro.core.solar_placer import solar_placer
+from repro.core import gila
+from repro.core.schedule import make_schedule, LevelSchedule
+from repro.core.pruning import prune_degree_one, reinsert
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutConfig:
+    coarsest_threshold: int = 50     # halt coarsening below this many vertices
+    max_levels: int = 24
+    min_shrink: float = 0.96         # stop if a level shrinks less than this
+    p_sun: float = 0.35
+    exact_threshold: int = 2048      # exact N-body below this size
+    coarsest_iters: int = 300
+    finest_iters: int = 50
+    ideal_len: float = 1.0
+    rep_const: float = 1.0
+    seed: int = 0
+    engine: str = "multigila"        # multigila | centralized | flat
+    prune: bool = True
+
+
+@dataclasses.dataclass
+class LayoutStats:
+    levels: int = 0
+    level_sizes: tuple = ()
+    merger_rounds_total: int = 0
+    supersteps: int = 0
+
+
+def connected_components(edges: np.ndarray, n: int) -> np.ndarray:
+    """Union-find component labels (host)."""
+    parent = np.arange(n, dtype=np.int64)
+
+    def find(x):
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
+
+    for u, v in np.asarray(edges, dtype=np.int64):
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    return np.array([find(i) for i in range(n)], dtype=np.int64)
+
+
+def build_hierarchy(g0: PaddedGraph, cfg: LayoutConfig
+                    ) -> tuple[list[PaddedGraph], list[LevelInfo]]:
+    """Coarsening loop: repeated Distributed Solar Merger applications."""
+    graphs, infos = [g0], []
+    g = g0
+    for lvl in range(cfg.max_levels):
+        if g.n <= cfg.coarsest_threshold:
+            break
+        st = run_merger(g, p_sun=cfg.p_sun, seed=cfg.seed + 101 * lvl)
+        cg, info = next_level(g, st)
+        if cg.n >= g.n * cfg.min_shrink or cg.n < 1:
+            break
+        graphs.append(cg)
+        infos.append(info)
+        g = cg
+    return graphs, infos
+
+
+def _layout_one_level(g: PaddedGraph, pos0, sched: LevelSchedule,
+                      cfg: LayoutConfig, seed: int):
+    if sched.mode == "neighbor":
+        nbr_idx, nbr_mask = gila.build_level_neighbors(g, sched.k, sched.cap,
+                                                       seed=seed)
+    else:
+        nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
+        nbr_mask = jnp.zeros((g.n_pad, 1), bool)
+    return gila.gila_layout(
+        g, pos0, nbr_idx, nbr_mask, mode=sched.mode, iters=sched.iters,
+        temp0=sched.temp0, temp_decay=sched.temp_decay,
+        ideal_len=cfg.ideal_len, rep_const=cfg.rep_const)
+
+
+def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig
+                     ) -> tuple[np.ndarray, LayoutStats]:
+    """Multi-GiLA on one connected component; returns positions [n,2]."""
+    stats = LayoutStats()
+    if n == 1:
+        return np.zeros((1, 2), np.float32), stats
+    if cfg.prune and cfg.engine != "flat":
+        pr = prune_degree_one(edges, n)
+    else:
+        pr = None
+
+    work_edges = pr.edges if pr is not None else edges
+    work_n = pr.n if pr is not None else n
+    mass = pr.mass if pr is not None else None
+    if work_n == 0 or len(work_edges) == 0:
+        # star graphs collapse entirely under pruning: lay out leaves only
+        pos = reinsert(pr, np.zeros((max(work_n, 1), 2), np.float32), work_edges) \
+            if pr is not None else np.zeros((n, 2), np.float32)
+        return pos, stats
+    g0 = build_graph(work_edges, work_n, mass=mass)
+
+    if cfg.engine == "flat":
+        sched = make_schedule(0, 1, g0.n, g0.m,
+                              exact_threshold=cfg.exact_threshold,
+                              coarsest_iters=cfg.coarsest_iters,
+                              ideal_len=cfg.ideal_len)
+        pos = gila.random_init(g0, cfg.ideal_len * max(g0.n, 4) ** 0.5,
+                               cfg.seed)
+        pos = _layout_one_level(g0, pos, sched, cfg, cfg.seed)
+        stats.levels = 1
+        stats.level_sizes = ((g0.n, g0.m),)
+        return np.asarray(pos)[:n], stats
+
+    graphs, infos = build_hierarchy(g0, cfg)
+    L = len(graphs)
+    stats.levels = L
+    stats.level_sizes = tuple((g.n, g.m) for g in graphs)
+
+    exact_thr = (10 ** 9) if cfg.engine == "centralized" else cfg.exact_threshold
+
+    # coarsest level: random init + layout
+    gk = graphs[-1]
+    sched = make_schedule(L - 1, L, gk.n, gk.m, exact_threshold=exact_thr,
+                          coarsest_iters=cfg.coarsest_iters,
+                          finest_iters=cfg.finest_iters,
+                          ideal_len=cfg.ideal_len)
+    pos = gila.random_init(gk, cfg.ideal_len * max(gk.n, 4) ** 0.5, cfg.seed)
+    pos = _layout_one_level(gk, pos, sched, cfg, cfg.seed + L)
+
+    # walk the hierarchy back down: place, then refine
+    for i in range(L - 2, -1, -1):
+        gi = graphs[i]
+        pos = solar_placer(gi, infos[i], pos, seed=cfg.seed + i,
+                           scatter_scale=0.5 * cfg.ideal_len)
+        sched = make_schedule(i, L, gi.n, gi.m, exact_threshold=exact_thr,
+                              coarsest_iters=cfg.coarsest_iters,
+                              finest_iters=cfg.finest_iters,
+                              ideal_len=cfg.ideal_len)
+        pos = _layout_one_level(gi, pos, sched, cfg, cfg.seed + i)
+
+    pos = np.asarray(pos, np.float32)[: g0.n]
+    if pr is not None:
+        pos = reinsert(pr, pos, work_edges)
+    return pos[:n] if pr is None else pos, stats
+
+
+def _pack_components(layouts: list[np.ndarray], pad: float = 2.0) -> np.ndarray:
+    """Shelf-pack component bounding boxes into a near-square arrangement."""
+    boxes = []
+    for P in layouts:
+        lo = P.min(axis=0) if len(P) else np.zeros(2)
+        hi = P.max(axis=0) if len(P) else np.zeros(2)
+        boxes.append((P - lo, hi - lo + pad))
+    order = np.argsort([-(b[1][0] * b[1][1]) for b in boxes])
+    total_area = sum(float(b[1][0] * b[1][1]) for b in boxes)
+    shelf_w = max(total_area ** 0.5, max(float(b[1][0]) for b in boxes))
+    out = [None] * len(boxes)
+    x = y = shelf_h = 0.0
+    for oi in order:
+        P, wh = boxes[oi]
+        if x + wh[0] > shelf_w and x > 0:
+            y += shelf_h
+            x = shelf_h = 0.0
+        out[oi] = P + np.array([x, y], np.float32)
+        x += float(wh[0])
+        shelf_h = max(shelf_h, float(wh[1]))
+    return out
+
+
+def multigila_layout(edges: np.ndarray, n: int,
+                     cfg: LayoutConfig | None = None
+                     ) -> tuple[np.ndarray, LayoutStats]:
+    """Full pipeline on a possibly-disconnected graph. Returns pos[n,2]."""
+    cfg = cfg or LayoutConfig()
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    labels = connected_components(edges, n)
+    comps = np.unique(labels)
+    stats = LayoutStats()
+    if len(comps) == 1:
+        pos, stats = layout_component(edges, n, cfg)
+        return pos, stats
+
+    layouts, index_maps = [], []
+    for c in comps:
+        vs = np.nonzero(labels == c)[0]
+        remap = np.full(n, -1, np.int64)
+        remap[vs] = np.arange(vs.size)
+        emask = labels[edges[:, 0]] == c
+        ce = np.stack([remap[edges[emask, 0]], remap[edges[emask, 1]]], 1)
+        p, s = layout_component(ce, vs.size, cfg)
+        stats.levels = max(stats.levels, s.levels)
+        layouts.append(np.asarray(p))
+        index_maps.append(vs)
+    packed = _pack_components(layouts)
+    pos = np.zeros((n, 2), np.float32)
+    for vs, P in zip(index_maps, packed):
+        pos[vs] = P
+    return pos, stats

@@ -1,0 +1,43 @@
+"""Per-level parameter schedules (paper §3.4 dynamic tuning of GiLA).
+
+The paper tunes k (repulsion horizon) by edge count, and the remaining
+parameters so that coarse levels get more quality (more iterations, hotter
+start) and fine levels get speed (good init ⇒ few iterations suffice).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.gila import paper_k_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelSchedule:
+    k: int               # repulsion horizon (paper's table)
+    cap: int             # neighbor-list cap (message-load bound)
+    iters: int
+    temp0: float
+    temp_decay: float
+    mode: str            # "exact" | "neighbor"
+
+
+def make_schedule(level: int, n_levels: int, n: int, m: int,
+                  *, exact_threshold: int = 2048,
+                  coarsest_iters: int = 300, finest_iters: int = 50,
+                  ideal_len: float = 1.0) -> LevelSchedule:
+    """level = 0 is the input graph; level = n_levels-1 is the coarsest."""
+    k = paper_k_schedule(m)
+    cap = {1: 32, 2: 64, 3: 128, 4: 192, 5: 256, 6: 256}[k]
+    # geometric interpolation: coarse → many iterations, fine → few
+    if n_levels <= 1:
+        iters = coarsest_iters
+    else:
+        frac = level / (n_levels - 1)           # 1 at coarsest
+        iters = int(finest_iters * (coarsest_iters / finest_iters) ** frac)
+    # hotter start on coarse levels (layout from scratch), gentle on fine
+    extent = ideal_len * max(n, 4) ** 0.5
+    temp0 = extent * (0.25 if level == n_levels - 1 else 0.06)
+    mode = "exact" if n <= exact_threshold else "neighbor"
+    return LevelSchedule(k=k, cap=cap, iters=max(iters, 10), temp0=temp0,
+                         temp_decay=0.985 if level == n_levels - 1 else 0.96,
+                         mode=mode)

@@ -1,0 +1,305 @@
+"""Distributed Solar Merger — the coarsening phase of Multi-GiLA (paper §3.2).
+
+Vertex-centric BSP protocol mapped to dense JAX array supersteps:
+
+  1. *Sun generation*: unassigned vertices self-elect with probability p;
+     conflicts within graph distance < 3 are resolved by ID (two max-
+     propagation supersteps — a sun survives iff it is the strict 2-hop
+     maximum among candidates, which guarantees pairwise sun distance ≥ 3).
+  2. *Solar-system generation*: suns broadcast offers; unassigned neighbors
+     become planets of the max-ID offering sun; planets forward offers;
+     unassigned 2-hop vertices become moons (recording the forwarding
+     planet for two-hop routing).
+  3. Steps 1–2 repeat until no vertex is unassigned (every 4th round is a
+     *forced* round where all unassigned vertices self-elect, guaranteeing
+     termination).
+  4. *Inter-system links*: edges whose endpoints lie in different systems
+     are discovered; each contributes a path of length depth(u)+1+depth(v).
+  5. *Next-level generation*: systems collapse into their suns; coarse-edge
+     weight = max path length over the parallel links (host compaction).
+
+Each superstep is a jitted fixed-shape program built from gather/segment
+primitives; the BSP halting vote ("no unassigned left") is the only host
+synchronization, matching Giraph's aggregator semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.graph import PaddedGraph, build_graph, edge_gather
+
+UNASSIGNED, SUN, PLANET, MOON = 0, 1, 2, 3
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MergerState:
+    """Per-vertex solar-system assignment (padding rows are UNASSIGNED but
+    masked out by g.vmask everywhere)."""
+    state: jnp.ndarray   # int32[n_pad] — UNASSIGNED/SUN/PLANET/MOON
+    sun: jnp.ndarray     # int32[n_pad] — index of the system's sun (n_pad = none)
+    depth: jnp.ndarray   # int32[n_pad] — hops to the sun (0/1/2)
+    parent: jnp.ndarray  # int32[n_pad] — next hop toward the sun (for 2-hop msgs)
+
+
+def init_state(g: PaddedGraph) -> MergerState:
+    n_pad = g.n_pad
+    return MergerState(
+        state=jnp.zeros((n_pad,), jnp.int32),
+        sun=jnp.full((n_pad,), n_pad, jnp.int32),
+        depth=jnp.full((n_pad,), -1, jnp.int32),
+        parent=jnp.full((n_pad,), n_pad, jnp.int32),
+    )
+
+
+def _push_max(g: PaddedGraph, values: jnp.ndarray) -> jnp.ndarray:
+    """Superstep: broadcast int values, combine with max (-1 = no message)."""
+    msgs = edge_gather(g, values)
+    msgs = jnp.where(g.emask, msgs, -1)
+    out = jax.ops.segment_max(msgs, g.dst, num_segments=g.n_pad + 1,
+                              indices_are_sorted=False)
+    return jnp.maximum(out[: g.n_pad], -1)
+
+
+@jax.jit
+def sun_election(g: PaddedGraph, st: MergerState, key: jnp.ndarray,
+                 p: jnp.ndarray, forced: jnp.ndarray,
+                 respect_existing: jnp.ndarray) -> MergerState:
+    """One sun-generation round (supersteps 1–3 of paper §3.2 step 1).
+
+    Existing suns participate in the conflict broadcast with dominating
+    priority (ID + n_pad) so fresh candidates never elect within 2 hops of
+    an established system. ``respect_existing=False`` is the *desperation*
+    mode used only when the BSP vote stalls: a vertex can be ≤2 hops from a
+    sun yet unreachable by offers (all intermediaries owned by other
+    systems), and must then be allowed to self-elect — a documented
+    deviation required for guaranteed termination.
+    """
+    n_pad = g.n_pad
+    ids = jnp.arange(n_pad, dtype=jnp.int32)
+    unassigned = (st.state == UNASSIGNED) & g.vmask
+    coin = jax.random.uniform(key, (n_pad,)) < p
+    cand = unassigned & (coin | forced)
+
+    # candidates announce their ID; two forwarding supersteps compute, per
+    # vertex, the maximum candidate ID within graph distance ≤ 2.
+    sun_prio = jnp.where((st.state == SUN) & respect_existing, ids + n_pad, -1)
+    h0 = jnp.maximum(jnp.where(cand, ids, -1), sun_prio)
+    h1 = jnp.maximum(h0, _push_max(g, h0))
+    h2 = jnp.maximum(h1, _push_max(g, h1))
+    # a candidate survives iff no strictly greater candidate (or established
+    # sun, which always dominates) is within 2 hops. Desperation mode relaxes
+    # the radius to 1 hop: stuck vertices cluster behind moons (which never
+    # forward offers), and pairwise non-adjacent ones must elect in parallel
+    # for O(log n) convergence (Luby-MIS on the stuck set).
+    h_conflict = jnp.where(respect_existing, h2, h1)
+    new_sun = cand & (h_conflict <= ids)
+
+    state = jnp.where(new_sun, SUN, st.state)
+    sun = jnp.where(new_sun, ids, st.sun)
+    depth = jnp.where(new_sun, 0, st.depth)
+    parent = jnp.where(new_sun, ids, st.parent)
+    return MergerState(state, sun, depth, parent)
+
+
+@jax.jit
+def system_growth(g: PaddedGraph, st: MergerState) -> MergerState:
+    """One solar-system-generation round (offers → planets → moons)."""
+    n_pad = g.n_pad
+    ids = jnp.arange(n_pad, dtype=jnp.int32)
+    unassigned = (st.state == UNASSIGNED) & g.vmask
+
+    # Superstep A: suns broadcast offers; unassigned neighbors accept the
+    # max-ID adjacent sun and become planets.
+    offer1 = _push_max(g, jnp.where(st.state == SUN, ids, -1))
+    becomes_planet = unassigned & (offer1 >= 0)
+    state = jnp.where(becomes_planet, PLANET, st.state)
+    sun = jnp.where(becomes_planet, offer1, st.sun)
+    depth = jnp.where(becomes_planet, 1, st.depth)
+    parent = jnp.where(becomes_planet, offer1, st.parent)  # next hop = the sun
+
+    # Superstep B: new planets forward their sun's offer; remaining
+    # unassigned vertices accept the max forwarded sun and become moons.
+    planet_fwd = jnp.where(state == PLANET, sun, -1)
+    offer2 = _push_max(g, planet_fwd)
+    still_un = unassigned & ~becomes_planet
+    becomes_moon = still_un & (offer2 >= 0)
+    # pick the forwarding planet: max planet ID among in-neighbors whose sun
+    # matches the accepted offer (two-hop confirmation route, paper §3.2).
+    match_val = jnp.where(state == PLANET, ids, -1)
+    msgs = edge_gather(g, jnp.stack([planet_fwd, match_val], axis=1))
+    key_match = jnp.where(
+        g.emask & (msgs[:, 0] >= 0) & (msgs[:, 0] == offer2[jnp.clip(g.dst, 0, n_pad - 1)])
+        & (g.dst < n_pad),
+        msgs[:, 1], -1)
+    via = jax.ops.segment_max(key_match, g.dst, num_segments=n_pad + 1)[:n_pad]
+    via = jnp.maximum(via, -1)
+
+    state = jnp.where(becomes_moon, MOON, state)
+    sun = jnp.where(becomes_moon, offer2, sun)
+    depth = jnp.where(becomes_moon, 2, depth)
+    parent = jnp.where(becomes_moon, via, parent)
+    return MergerState(state, sun, depth, parent)
+
+
+def run_merger(g: PaddedGraph, *, p_sun: float = 0.35, seed: int = 0,
+               max_rounds: int = 96, force_every: int = 4) -> MergerState:
+    """Run election+growth rounds until every valid vertex is assigned.
+
+    The BSP halting vote ("any unassigned left?") is the only host sync per
+    round. If two consecutive rounds make no progress, the next round runs
+    in desperation mode (forced candidacy, existing suns not respected),
+    which guarantees at least one new sun and hence termination.
+    """
+    st = init_state(g)
+    key = jax.random.PRNGKey(seed)
+    prev_remaining = g.n + 1
+    stalls = 0
+    desperate = False
+    for r in range(max_rounds):
+        key, sub = jax.random.split(key)
+        # sticky desperation: once the vote stalls twice, run Luby-MIS-style
+        # rounds (all unassigned candidates, existing suns not respected)
+        # until convergence — O(log n) rounds with strict progress.
+        desperate = desperate or stalls >= 2
+        forced = jnp.asarray(desperate or r % force_every == force_every - 1)
+        st = sun_election(g, st, sub, jnp.asarray(p_sun, jnp.float32), forced,
+                          jnp.asarray(not desperate))
+        st = system_growth(g, st)
+        # BSP halting vote (host sync, as a Giraph aggregator would)
+        remaining = int(jnp.sum((st.state == UNASSIGNED) & g.vmask))
+        if remaining == 0:
+            return st
+        stalls = 0 if remaining < prev_remaining else stalls + 1
+        prev_remaining = remaining
+    raise RuntimeError(f"solar merger did not converge in {max_rounds} rounds")
+
+
+def centralized_solar_merger(edges: np.ndarray, n: int, seed: int = 0
+                             ) -> tuple[np.ndarray, int]:
+    """Sequential Solar Merger reference (FM³'s greedy, Hachul 2005):
+    visit vertices in random order; an unassigned vertex becomes a sun and
+    absorbs its unassigned ≤2-hop neighborhood (planets then moons).
+    Returns (sun_of[n], n_suns) — used for the Fig.5 level-count baseline.
+    """
+    from repro.graphs.graph import to_csr
+    rng = np.random.default_rng(seed)
+    row_ptr, col = to_csr(edges, n)
+    sun_of = np.full(n, -1, dtype=np.int64)
+    n_suns = 0
+    for v in rng.permutation(n):
+        if sun_of[v] >= 0:
+            continue
+        sun_of[v] = v
+        n_suns += 1
+        planets = [u for u in col[row_ptr[v]:row_ptr[v + 1]]
+                   if sun_of[u] < 0]
+        for u in planets:
+            sun_of[u] = v
+        for u in planets:
+            for w in col[row_ptr[u]:row_ptr[u + 1]]:
+                if sun_of[w] < 0:
+                    sun_of[w] = v
+    return sun_of, n_suns
+
+
+def centralized_levels(edges: np.ndarray, n: int, *, threshold: int = 50,
+                       max_levels: int = 24, seed: int = 0) -> list[int]:
+    """Level sizes produced by iterating the centralized Solar Merger."""
+    sizes = [n]
+    cur_edges, cur_n = edges, n
+    for _ in range(max_levels):
+        if cur_n <= threshold or len(cur_edges) == 0:
+            break
+        sun_of, n_suns = centralized_solar_merger(cur_edges, cur_n, seed)
+        if n_suns >= cur_n:
+            break
+        new_idx = np.full(cur_n, -1, dtype=np.int64)
+        suns = np.unique(sun_of)
+        new_idx[suns] = np.arange(len(suns))
+        ce = new_idx[sun_of[cur_edges]]
+        ce = ce[ce[:, 0] != ce[:, 1]]
+        ce = np.unique(np.sort(ce, axis=1), axis=0) if len(ce) else ce
+        cur_edges, cur_n = ce, len(suns)
+        sizes.append(cur_n)
+    return sizes
+
+
+@dataclasses.dataclass
+class LevelInfo:
+    """Host-side record connecting level i to level i+1 (for the placer)."""
+    parent_coarse: np.ndarray  # int32[n_pad_i] — coarse index of v's sun
+    sun_of: np.ndarray         # int32[n_pad_i] — sun vertex of v (level-i idx)
+    depth: np.ndarray          # int32[n_pad_i]
+    state: np.ndarray          # int32[n_pad_i]
+    sun_pos_index: np.ndarray  # int32[n_coarse] — level-i vertex of each coarse vertex
+
+
+def next_level(g: PaddedGraph, st: MergerState, *, pad_mult: int = 256
+               ) -> tuple[PaddedGraph, LevelInfo]:
+    """Collapse solar systems into suns → coarse graph (host compaction).
+
+    Coarse vertices = suns (mass = Σ member masses); coarse edges = unique
+    inter-system links, weighted by the longest member path
+    (depth_u + 1 + depth_v) over all parallel links, times the max endpoint
+    edge weight (so weights compound across levels as in FM³).
+    """
+    n_pad = g.n_pad
+    state = np.asarray(st.state)
+    sun = np.asarray(st.sun)
+    depth = np.asarray(st.depth)
+    vmask = np.asarray(g.vmask)
+    mass = np.asarray(g.mass)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    emask = np.asarray(g.emask)
+    ewt = np.asarray(g.ewt)
+
+    is_sun = (state == SUN) & vmask
+    n_coarse = int(is_sun.sum())
+    new_idx = np.full((n_pad + 1,), -1, dtype=np.int64)
+    new_idx[:n_pad][is_sun] = np.arange(n_coarse)
+    sun_safe = np.where(vmask, sun, n_pad)
+    parent_coarse = new_idx[sun_safe]  # -1 for padding rows
+
+    # coarse masses
+    cmass = np.zeros((n_coarse,), dtype=np.float32)
+    member = vmask & (parent_coarse >= 0)
+    np.add.at(cmass, parent_coarse[member], mass[member])
+
+    # inter-system links → coarse edges
+    e_ok = emask & (src < n_pad) & (dst < n_pad)
+    su, sv = sun_safe[src[e_ok]], sun_safe[dst[e_ok]]
+    cross = su != sv
+    cu = new_idx[su[cross]]
+    cv = new_idx[sv[cross]]
+    plen = (depth[src[e_ok]][cross] + 1 + depth[dst[e_ok]][cross]).astype(np.float32)
+    plen = plen * ewt[e_ok][cross]  # compound desired lengths across levels
+    lo = np.minimum(cu, cv)
+    hi = np.maximum(cu, cv)
+    key = lo * (n_coarse + 1) + hi
+    order = np.argsort(key)
+    key_s, lo_s, hi_s, w_s = key[order], lo[order], hi[order], plen[order]
+    if key_s.size:
+        uniq_mask = np.concatenate([[True], key_s[1:] != key_s[:-1]])
+        seg_id = np.cumsum(uniq_mask) - 1
+        n_edges = int(seg_id[-1]) + 1
+        w_max = np.zeros((n_edges,), np.float32)
+        np.maximum.at(w_max, seg_id, w_s)
+        ce = np.stack([lo_s[uniq_mask], hi_s[uniq_mask]], axis=1)
+    else:
+        ce = np.zeros((0, 2), np.int64)
+        w_max = np.zeros((0,), np.float32)
+
+    sun_pos_index = np.nonzero(is_sun)[0].astype(np.int32)
+    cg = build_graph(ce, n_coarse, mass=cmass, ewt=w_max, pad_mult=pad_mult)
+    info = LevelInfo(
+        parent_coarse=parent_coarse[:n_pad].astype(np.int32),
+        sun_of=sun_safe[:n_pad].astype(np.int32),
+        depth=depth.astype(np.int32), state=state.astype(np.int32),
+        sun_pos_index=sun_pos_index)
+    return cg, info

@@ -1,0 +1,75 @@
+"""Distributed Solar Placer — the placement phase of Multi-GiLA (paper §3.3).
+
+Level-(i+1) positions flow back to the level-i suns through the inter-level
+edges; every planet/moon that lies on an inter-system path is placed at the
+barycentric point along the segment between its own sun and the neighboring
+system's sun (fraction = its depth over the path length); members with no
+inter-system link scatter around their sun at a radius proportional to
+their depth. All steps are gather/segment supersteps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.graph import PaddedGraph, edge_gather
+from repro.core.solar_merger import LevelInfo, SUN
+
+
+@jax.jit
+def _place(g: PaddedGraph, sun_of: jnp.ndarray, depth: jnp.ndarray,
+           sun_pos: jnp.ndarray, key: jnp.ndarray, scatter_scale: jnp.ndarray):
+    """sun_pos: float32[n_pad, 2] — position of each vertex's SUN (already
+    routed from the coarse drawing). Returns positions for all vertices."""
+    n_pad = g.n_pad
+    # per half-edge (u → v): if systems differ, v gets a barycentric
+    # suggestion between pos(sun_v) and pos(sun_u).
+    sun_src = edge_gather(g, sun_of[:, None])[:, 0]
+    depth_src = edge_gather(g, depth[:, None])[:, 0]
+    sun_dst = jnp.where(g.dst < n_pad, sun_of[jnp.clip(g.dst, 0, n_pad - 1)], n_pad)
+    depth_dst = jnp.where(g.dst < n_pad, depth[jnp.clip(g.dst, 0, n_pad - 1)], 0)
+    cross = g.emask & (sun_src != sun_dst) & (sun_src < n_pad) & (sun_dst < n_pad)
+
+    pos_sun_dst = sun_pos[jnp.clip(g.dst, 0, n_pad - 1)]
+    # position of the *other* system's sun: route via the src endpoint
+    pos_sun_src = edge_gather(g, sun_pos)
+
+    plen = (depth_src + 1 + depth_dst).astype(jnp.float32)
+    frac = depth_dst.astype(jnp.float32) / jnp.maximum(plen, 1.0)
+    suggestion = pos_sun_dst * (1.0 - frac[:, None]) + pos_sun_src * frac[:, None]
+    suggestion = jnp.where(cross[:, None], suggestion, 0.0)
+    cnt = jax.ops.segment_sum(cross.astype(jnp.float32), g.dst,
+                              num_segments=n_pad + 1)[:n_pad]
+    acc = jax.ops.segment_sum(suggestion, g.dst, num_segments=n_pad + 1)[:n_pad]
+
+    has_sugg = cnt > 0
+    mean_sugg = acc / jnp.maximum(cnt, 1.0)[:, None]
+    # members without inter-system paths scatter deterministically around
+    # their sun (radius ∝ depth), as FM³ does for isolated system members.
+    ang = jax.random.uniform(key, (n_pad,), minval=0.0, maxval=2 * jnp.pi)
+    offs = jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=1)
+    radius = scatter_scale * jnp.maximum(depth, 1).astype(jnp.float32)
+    scatter = sun_pos + offs * radius[:, None]
+    pos = jnp.where(has_sugg[:, None], mean_sugg, scatter)
+    return pos
+
+
+def solar_placer(g: PaddedGraph, info: LevelInfo, coarse_pos: np.ndarray,
+                 *, scatter_scale: float = 0.5, seed: int = 0) -> jnp.ndarray:
+    """Compute initial level-i positions from the coarse drawing Γ_{i+1}."""
+    n_pad = g.n_pad
+    # route coarse positions to suns through the inter-level edges, then to
+    # every member via its system-sun pointer.
+    coarse_pos = jnp.asarray(coarse_pos, jnp.float32)
+    pc = jnp.asarray(np.where(info.parent_coarse < 0, 0, info.parent_coarse))
+    member_sun_pos = coarse_pos[pc]           # [n_pad, 2] — pos of v's sun
+    sun_of = jnp.asarray(info.sun_of)
+    depth = jnp.asarray(np.maximum(info.depth, 0))
+    key = jax.random.PRNGKey(seed)
+    pos = _place(g, sun_of, depth, member_sun_pos, key,
+                 jnp.asarray(scatter_scale, jnp.float32))
+    # suns sit exactly at their coarse position
+    is_sun = jnp.asarray(info.state == SUN) & g.vmask
+    pos = jnp.where(is_sun[:, None], member_sun_pos, pos)
+    return pos

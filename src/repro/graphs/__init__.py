@@ -1,0 +1,3 @@
+from repro.graphs.graph import (PaddedGraph, build_graph, unique_edges, to_csr,
+                                push_max, push_sum_vec, edge_gather)
+from repro.graphs import generators, metrics, io

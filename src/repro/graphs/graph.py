@@ -1,0 +1,163 @@
+"""Static-shape padded graph representation for JAX.
+
+Every graph is stored with BOTH directions of each undirected edge so that a
+``segment_*`` over ``dst`` aggregates all messages arriving at a vertex —
+the dense-array equivalent of a Giraph superstep's message delivery.
+
+Padding convention: invalid vertices/edges use the sentinel index ``n_pad``
+(one past the last valid slot). Segment ops therefore use
+``num_segments=n_pad + 1`` and drop the last row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PaddedGraph:
+    """A padded, undirected graph as JAX arrays.
+
+    Attributes:
+      src, dst:   int32[m_pad] — directed half-edges (each undirected edge
+                  appears once per direction). Padding rows are (n_pad, n_pad).
+      vmask:      bool[n_pad] — valid-vertex mask.
+      emask:      bool[m_pad] — valid-half-edge mask.
+      mass:       float32[n_pad] — vertex masses (≥1 after pruning).
+      ewt:        float32[m_pad] — desired-length weight per half edge
+                  (1 on the input graph; coarse graphs get path lengths).
+      n, m:       static python ints — number of valid vertices / undirected
+                  edges (m_pad == 2 * padded undirected count).
+    """
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    vmask: jnp.ndarray
+    emask: jnp.ndarray
+    mass: jnp.ndarray
+    ewt: jnp.ndarray
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_pad(self) -> int:
+        return int(self.vmask.shape[0])
+
+    @property
+    def m_pad(self) -> int:
+        return int(self.src.shape[0])
+
+    # -- degree -------------------------------------------------------------
+    def degrees(self) -> jnp.ndarray:
+        """int32[n_pad] vertex degrees (valid half-edges per destination)."""
+        ones = jnp.where(self.emask, 1, 0)
+        deg = jax.ops.segment_sum(ones, self.dst, num_segments=self.n_pad + 1)
+        return deg[: self.n_pad]
+
+
+def build_graph(edges: np.ndarray, n: int, *, n_pad: int | None = None,
+                m_pad: int | None = None, mass: np.ndarray | None = None,
+                ewt: np.ndarray | None = None, pad_mult: int = 256) -> PaddedGraph:
+    """Build a PaddedGraph from a unique undirected edge list ``edges[k,2]``.
+
+    Self loops and duplicate edges must already be removed. ``n_pad``/``m_pad``
+    default to the sizes rounded up to ``pad_mult`` (power-of-two-ish buckets
+    keep XLA recompilation bounded across multilevel graphs).
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    m = int(edges.shape[0])
+    if n_pad is None:
+        n_pad = max(_round_up(max(n, 1), pad_mult), pad_mult)
+    if m_pad is None:
+        m_pad = max(_round_up(max(2 * m, 1), pad_mult), pad_mult)
+    assert m_pad >= 2 * m and n_pad >= n
+
+    src = np.full((m_pad,), n_pad, dtype=np.int32)
+    dst = np.full((m_pad,), n_pad, dtype=np.int32)
+    emask = np.zeros((m_pad,), dtype=bool)
+    w = np.ones((m_pad,), dtype=np.float32)
+    if m:
+        both_src = np.concatenate([edges[:, 0], edges[:, 1]]).astype(np.int32)
+        both_dst = np.concatenate([edges[:, 1], edges[:, 0]]).astype(np.int32)
+        src[: 2 * m] = both_src
+        dst[: 2 * m] = both_dst
+        emask[: 2 * m] = True
+        if ewt is not None:
+            ew = np.asarray(ewt, dtype=np.float32).reshape(-1)
+            w[: 2 * m] = np.concatenate([ew, ew])
+    vmask = np.zeros((n_pad,), dtype=bool)
+    vmask[:n] = True
+    ms = np.zeros((n_pad,), dtype=np.float32)
+    ms[:n] = 1.0 if mass is None else np.asarray(mass, dtype=np.float32)[:n]
+    return PaddedGraph(
+        src=jnp.asarray(src), dst=jnp.asarray(dst),
+        vmask=jnp.asarray(vmask), emask=jnp.asarray(emask),
+        mass=jnp.asarray(ms), ewt=jnp.asarray(w), n=n, m=m)
+
+
+def unique_edges(g: PaddedGraph) -> np.ndarray:
+    """Return the (host) unique undirected edge list [m, 2] (src < dst)."""
+    src = np.asarray(g.src)[: 2 * g.m]
+    dst = np.asarray(g.dst)[: 2 * g.m]
+    keep = src < dst
+    return np.stack([src[keep], dst[keep]], axis=1).astype(np.int64)
+
+
+def to_csr(edges: np.ndarray, n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side CSR (row_ptr[n+1], col_idx[2m]) from unique undirected edges."""
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    both = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    order = np.argsort(both[:, 0], kind="stable")
+    both = both[order]
+    col = both[:, 1].astype(np.int32)
+    counts = np.bincount(both[:, 0], minlength=n)
+    row_ptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=row_ptr[1:])
+    return row_ptr, col
+
+
+# -- message-passing primitives (the Giraph superstep vocabulary) -------------
+
+def edge_gather(g: PaddedGraph, values: jnp.ndarray) -> jnp.ndarray:
+    """Per half-edge value read from the SOURCE endpoint (padding → 0-row)."""
+    padded = jnp.concatenate(
+        [values, jnp.zeros((1,) + values.shape[1:], values.dtype)], axis=0)
+    return padded[g.src]
+
+
+@partial(jax.jit, static_argnames=("combine",))
+def push_max(g: PaddedGraph, values: jnp.ndarray, combine: str = "max") -> jnp.ndarray:
+    """One superstep: every vertex broadcasts ``values[v]``; each vertex
+    aggregates incoming messages with max/sum (padding-safe)."""
+    msgs = edge_gather(g, values)
+    if combine == "max":
+        if jnp.issubdtype(values.dtype, jnp.floating):
+            neutral = jnp.finfo(values.dtype).min
+        else:
+            neutral = jnp.iinfo(values.dtype).min
+        msgs = jnp.where(g.emask, msgs, neutral)
+        out = jax.ops.segment_max(msgs, g.dst, num_segments=g.n_pad + 1)
+        if not jnp.issubdtype(values.dtype, jnp.floating):
+            out = jnp.maximum(out, -1)  # empty inbox → -1 ("no message")
+    elif combine == "sum":
+        msgs = jnp.where(g.emask, msgs, jnp.zeros_like(msgs))
+        out = jax.ops.segment_sum(msgs, g.dst, num_segments=g.n_pad + 1)
+    else:
+        raise ValueError(combine)
+    return out[: g.n_pad]
+
+
+def push_sum_vec(g: PaddedGraph, values: jnp.ndarray) -> jnp.ndarray:
+    """Vector-valued sum-combiner superstep: values[n_pad, d] → [n_pad, d]."""
+    msgs = edge_gather(g, values)
+    msgs = jnp.where(g.emask[:, None], msgs, jnp.zeros_like(msgs))
+    out = jax.ops.segment_sum(msgs, g.dst, num_segments=g.n_pad + 1)
+    return out[: g.n_pad]

@@ -1,0 +1,35 @@
+"""Edge-list IO + SVG export for computed layouts."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def save_edgelist(path: str, edges: np.ndarray) -> None:
+    np.savetxt(path, np.asarray(edges, dtype=np.int64), fmt="%d")
+
+
+def load_edgelist(path: str) -> tuple[np.ndarray, int]:
+    e = np.loadtxt(path, dtype=np.int64).reshape(-1, 2)
+    return e, int(e.max()) + 1 if e.size else 0
+
+
+def save_svg(path: str, pos: np.ndarray, edges: np.ndarray,
+             size: int = 1000, stroke: float = 0.6) -> None:
+    """Minimal SVG writer so layouts can be inspected without matplotlib."""
+    pos = np.asarray(pos, dtype=np.float64)
+    lo, hi = pos.min(axis=0), pos.max(axis=0)
+    span = np.maximum(hi - lo, 1e-9)
+    P = (pos - lo) / span * (size - 20) + 10
+    lines = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{size}" height="{size}">',
+             f'<rect width="100%" height="100%" fill="white"/>']
+    for (u, v) in np.asarray(edges, dtype=np.int64):
+        lines.append(
+            f'<line x1="{P[u,0]:.1f}" y1="{P[u,1]:.1f}" '
+            f'x2="{P[v,0]:.1f}" y2="{P[v,1]:.1f}" '
+            f'stroke="black" stroke-width="{stroke}" stroke-opacity="0.5"/>')
+    r = max(1.0, 3.0 - 0.0002 * len(pos))
+    for p in P:
+        lines.append(f'<circle cx="{p[0]:.1f}" cy="{p[1]:.1f}" r="{r:.1f}" fill="#c33"/>')
+    lines.append("</svg>")
+    with open(path, "w") as f:
+        f.write("\n".join(lines))

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot spots the paper optimizes:
+#   nbody/          — tiled all-pairs Fruchterman-Reingold repulsion
+#                     (the single-level layout hot spot, paper §3.4)
+#   neighbor_force/ — k-hop neighbor-list force accumulation (GiLA locality)
+#   flash_attention/— blocked causal attention for the LM architecture zoo
+# Each subpackage: kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+# tiling), ops.py (jit'd wrapper with platform dispatch), ref.py (pure-jnp
+# oracle). Kernels are validated on CPU with interpret=True.

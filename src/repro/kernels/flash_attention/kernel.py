@@ -1,0 +1,89 @@
+"""Flash attention (forward) — Pallas TPU kernel.
+
+Classic streaming-softmax schedule adapted to the TPU memory hierarchy:
+grid = (batch·head, q_blocks, kv_blocks) with the kv dimension innermost
+(sequential accumulation); each program holds a (BQ × hd) query tile and a
+(BK × hd) KV tile in VMEM, carries the running max/denominator in f32 VMEM
+scratch, and writes the normalized output on the last kv step. Causal tiles
+above the diagonal are handled by masking — the kernel stays shape-static.
+
+VMEM at BQ=BK=512, hd=128, bf16: q 128K + k 128K + v 128K + acc f32 256K
++ m/l 4K ≈ 0.7 MB per program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # [BQ, hd]
+    k = k_ref[0]                                   # [BK, hd]
+    v = v_ref[0]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    # fully-masked rows keep m = -inf; guard the exp shift
+    shift = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - shift[:, None])
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - shift), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = False):
+    """q [B,Sq,hd], k/v [B,Sk,hd]; B is the flattened batch·head dim."""
+    B, Sq, hd = q.shape
+    Sk = k.shape[1]
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk)
+    grid = (B, Sq // block_q, Sk // block_k)
+    kern = functools.partial(_flash_kernel, causal=causal,
+                             block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,45 @@
+"""Jit'd wrapper + dispatch for flash attention.
+
+The model's chunked-XLA attention (models/layers._sdpa) is the portable
+path; on TPU this kernel replaces the inner (batch·head)-sliced attention.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env in ("interpret", "ref", "pallas"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 512, block_k: int = 512):
+    """q [B,S,H,hd], k/v [B,S,KV,hd] (GQA) → [B,S,H,hd]."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    mode = _mode()
+    # flatten (B, KV, G) → rows; KV heads broadcast over their G q-heads
+    qf = q.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4) \
+          .reshape(B * KV * G, Sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd), G, axis=0)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd), G, axis=0)
+    if mode == "ref" or Sq % 128 or Sk % 128:
+        out = flash_attention_ref(qf, kf, vf, causal=causal)
+    else:
+        bq = min(block_q, Sq)
+        bk = min(block_k, Sk)
+        out = flash_attention_pallas(qf, kf, vf, causal=causal, block_q=bq,
+                                     block_k=bk,
+                                     interpret=(mode == "interpret"))
+    return out.reshape(B, KV, G, Sq, hd).transpose(0, 3, 1, 2, 4) \
+              .reshape(B, Sq, H, hd)

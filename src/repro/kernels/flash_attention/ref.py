@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for blocked causal attention (single head-group)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q [B,Sq,hd], k/v [B,Sk,hd] → [B,Sq,hd] (f32 softmax)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        kpos = jnp.arange(Sk)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bqk,bkd->bqd", p, v)

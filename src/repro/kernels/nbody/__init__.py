@@ -1,0 +1,1 @@
+from repro.kernels.nbody import ops, ref, kernel

@@ -1,0 +1,34 @@
+"""Jit'd wrapper + platform dispatch for the N-body repulsion kernel.
+
+On TPU the Pallas kernel runs natively; elsewhere the pure-jnp reference
+executes (XLA fuses it well on CPU). Set ``REPRO_PALLAS=interpret`` to force
+the Pallas kernel through the interpreter (used by integration tests).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.nbody.kernel import nbody_repulsion_pallas
+from repro.kernels.nbody.ref import nbody_repulsion_ref
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env in ("interpret", "ref", "pallas"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def nbody_repulsion(pos, mass, vmask, C, L, min_dist):
+    mode = _mode()
+    if mode == "ref":
+        return nbody_repulsion_ref(pos, mass, vmask, C, L, min_dist)
+    n = pos.shape[0]
+    block = 256 if n % 256 == 0 else (128 if n % 128 == 0 else None)
+    if block is None:  # unaligned shapes fall back to the oracle
+        return nbody_repulsion_ref(pos, mass, vmask, C, L, min_dist)
+    return nbody_repulsion_pallas(pos, mass, vmask, C, L, min_dist,
+                                  block_rows=block, block_cols=block,
+                                  interpret=(mode == "interpret"))

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the all-pairs FR repulsion kernel.
+
+Force on v:  f_v = Σ_u C · L² · w_u · (pos_v − pos_u) / max(d², ε²)
+with w_u = mass_u · vmask_u (source-mass weighting: a coarse sun of mass M
+repels like M unit vertices, keeping levels consistent).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def nbody_repulsion_ref(pos, mass, vmask, C, L, min_dist):
+    w = jnp.where(vmask, mass, 0.0).astype(jnp.float32)
+    delta = pos[:, None, :] - pos[None, :, :]            # [n, n, 2]
+    d2 = jnp.sum(delta * delta, axis=-1) + min_dist ** 2
+    inv = (C * L * L) * w[None, :] / d2                  # [n, n]
+    f = jnp.sum(delta * inv[:, :, None], axis=1)         # [n, 2]
+    return jnp.where(vmask[:, None], f, 0.0)

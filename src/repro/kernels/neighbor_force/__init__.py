@@ -1,0 +1,1 @@
+from repro.kernels.neighbor_force import ops, ref, kernel

@@ -1,0 +1,39 @@
+"""Jit'd wrapper + dispatch for the neighbor-list repulsion kernel."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.neighbor_force.kernel import neighbor_repulsion_pallas
+from repro.kernels.neighbor_force.ref import neighbor_repulsion_ref
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env in ("interpret", "ref", "pallas"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def neighbor_repulsion(pos, mass, nbr_idx, nbr_mask, vmask, C, L, min_dist):
+    mode = _mode()
+    if mode == "ref":
+        return neighbor_repulsion_ref(pos, mass, nbr_idx, nbr_mask, vmask,
+                                      C, L, min_dist)
+    # XLA-side gather (padded tables make the sentinel row contribute 0)
+    w = jnp.where(vmask, mass, 0.0).astype(jnp.float32)
+    pos_p = jnp.concatenate([pos, jnp.zeros((1, 2), pos.dtype)], axis=0)
+    w_p = jnp.concatenate([w, jnp.zeros((1,), w.dtype)], axis=0)
+    nbr_pos = pos_p[nbr_idx]
+    nbr_w = jnp.where(nbr_mask, w_p[nbr_idx], 0.0)
+    n = pos.shape[0]
+    block = 128 if n % 128 == 0 else None
+    if block is None:
+        return neighbor_repulsion_ref(pos, mass, nbr_idx, nbr_mask, vmask,
+                                      C, L, min_dist)
+    f = neighbor_repulsion_pallas(pos, nbr_pos, nbr_w, C, L, min_dist,
+                                  block_rows=block,
+                                  interpret=(mode == "interpret"))
+    return jnp.where(vmask[:, None], f, 0.0)

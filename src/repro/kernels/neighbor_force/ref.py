@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the k-hop neighbor-list repulsion.
+
+``nbr_idx[n, K]`` holds up to K neighbor indices per vertex (sentinel = n);
+the gather uses a (n+1)-row padded position/mass table so sentinel rows
+contribute zero force.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _pad_tables(pos, mass, vmask):
+    w = jnp.where(vmask, mass, 0.0).astype(jnp.float32)
+    pos_p = jnp.concatenate([pos, jnp.zeros((1, 2), pos.dtype)], axis=0)
+    w_p = jnp.concatenate([w, jnp.zeros((1,), w.dtype)], axis=0)
+    return pos_p, w_p
+
+
+def neighbor_repulsion_ref(pos, mass, nbr_idx, nbr_mask, vmask, C, L, min_dist):
+    pos_p, w_p = _pad_tables(pos, mass, vmask)
+    npos = pos_p[nbr_idx]                                 # [n, K, 2]
+    nw = jnp.where(nbr_mask, w_p[nbr_idx], 0.0)           # [n, K]
+    delta = pos[:, None, :] - npos                        # [n, K, 2]
+    d2 = jnp.sum(delta * delta, axis=-1) + min_dist ** 2
+    inv = (C * L * L) * nw / d2
+    f = jnp.sum(delta * inv[:, :, None], axis=1)
+    return jnp.where(vmask[:, None], f, 0.0)

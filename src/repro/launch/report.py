@@ -1,0 +1,94 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun/.
+
+    PYTHONPATH=src python -m repro.launch.report [--out results/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_all(root="results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(root, "*", "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def _flags(rec):
+    o = rec.get("opts", {})
+    out = []
+    if o.get("seq_shard"):
+        out.append("SP")
+    if o.get("fsdp"):
+        out.append("FSDP")
+    if o.get("zero_opt"):
+        out.append("Z1")
+    if o.get("accum", 1) > 1:
+        out.append(f"acc{o['accum']}")
+    if o.get("remat") not in (None, "none"):
+        out.append("rm")
+    return "+".join(out) or "-"
+
+
+def roofline_table(recs, mesh: str) -> str:
+    rows = [r for r in recs if r["mesh"] == mesh and "roofline" in r]
+    rows.sort(key=lambda r: (r["arch"], r["cell"]))
+    out = ["| arch | cell | flags | compute s | memory s | collective s | "
+           "bound | MODEL_FLOPs/HLO | roofline frac | peak GiB | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        peak = mem.get("peak_bytes_analytic", mem.get("peak_bytes", 0))
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {_flags(r)} "
+            f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} | {t['bottleneck']} "
+            f"| {t.get('useful_ratio', 0):.2f} | {t['roofline_frac']:.3f} "
+            f"| {fmt_bytes(peak)} | {'Y' if mem.get('fits_hbm') else 'N'} |")
+    return "\n".join(out)
+
+
+def dryrun_summary(recs) -> str:
+    out = ["| arch | cell | mesh | compile s | HLO flops/dev | "
+           "coll GB/dev | top collective |", "|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["cell"], r["mesh"])):
+        t = r.get("roofline", {})
+        cols = r.get("collectives", [])
+        top = (f"{cols[0]['op']}(g={cols[0]['group']}) "
+               f"{cols[0]['bytes']/1e9:.0f}GB" if cols else "-")
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} "
+            f"| {r.get('compile_s', 0):.0f} | {t.get('flops', 0):.2e} "
+            f"| {t.get('coll_bytes', 0)/1e9:.1f} | {top} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.md")
+    args = ap.parse_args(argv)
+    recs = load_all(args.root)
+    parts = ["## Roofline — single pod 16×16 (256 chips)\n",
+             roofline_table(recs, "16x16"),
+             "\n\n## Roofline — two pods 2×16×16 (512 chips)\n",
+             roofline_table(recs, "2x16x16"),
+             "\n\n## Dry-run detail\n", dryrun_summary(recs)]
+    txt = "\n".join(parts)
+    with open(args.out, "w") as f:
+        f.write(txt)
+    print(f"wrote {args.out} ({len(recs)} cells)")
+    return txt
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.model import (init_params, param_specs, forward, loss_fn,
+                                prefill, decode_step, init_decode_state,
+                                input_specs)
+from repro.models import layers, moe, ssm

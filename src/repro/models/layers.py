@@ -1,0 +1,280 @@
+"""Transformer layer library: norms, RoPE, GQA attention, gated MLPs.
+
+Pure-function style: ``init_*`` builds param dicts, ``apply`` functions are
+stateless. Activations run in bf16 with f32 softmax/norm internals; params
+are stored f32 and cast at use (the optimizer keeps f32 masters anyway).
+Sharding constraints use the logical rules from repro.parallel.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import shard, current_rules
+
+# REPRO_ACT_DTYPE=float32 works around an XLA:CPU crash with bf16 inside
+# partial-manual shard_map regions (pipeline parallelism tests); TPU is
+# unaffected (native bf16).
+import os as _os
+ACT_DTYPE = (jnp.float32 if _os.environ.get("REPRO_ACT_DTYPE") == "float32"
+             else jnp.bfloat16)
+
+
+def _normal(key, shape, scale):
+    return (scale * jax.random.normal(key, shape, jnp.float32))
+
+
+# -- norms ---------------------------------------------------------------------
+
+def init_norm(d: int, kind: str):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# -- rotary position embeddings -------------------------------------------------
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions int32[...,S] → (cos, sin) [..., S, head_dim//2] f32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, hd]; cos/sin broadcastable [..., S, 1, hd//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+# -- attention -------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = D ** -0.5
+    return {
+        "wq": _normal(k1, (D, H, hd), s),
+        "wk": _normal(k2, (D, KV, hd), s),
+        "wv": _normal(k3, (D, KV, hd), s),
+        "wo": _normal(k4, (H, hd, D), (H * hd) ** -0.5),
+    }
+
+
+def attention_param_specs(cfg, rules):
+    from jax.sharding import PartitionSpec as P
+    h, kv = rules.heads, rules.kv_heads
+    return {"wq": P(None, h, None), "wk": P(None, kv, None),
+            "wv": P(None, kv, None), "wo": P(h, None, None)}
+
+
+def _qkv(p, x, cfg, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    r = current_rules()
+    if r is not None and r.mesh is not None:
+        q = shard(q, r.batch, None, r.heads, None)
+        k = shard(k, r.batch, None, r.kv_heads, None)
+        v = shard(v, r.batch, None, r.kv_heads, None)
+    cos, sin = rope_angles(positions, cfg.hd, cfg.rope_theta)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset=0, kv_len=None, chunk: int = 0):
+    """Scaled dot-product attention with GQA; optional flash-style chunking
+    over the KV axis (scan with running max/sum) for long sequences.
+
+    q [B,Sq,H,hd], k/v [B,Sk,KV,hd]. ``kv_len`` masks positions ≥ kv_len
+    (decode with a partially filled cache). ``q_offset`` is the absolute
+    position of q[0] for causal masking.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scale = hd ** -0.5
+
+    def block_scores(kb, kb_start, Skb):
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb) * scale
+        s = s.astype(jnp.float32)
+        kpos = kb_start + jnp.arange(Skb)
+        if causal:
+            qpos = q_offset + jnp.arange(Sq)
+            s = jnp.where(qpos[:, None] >= kpos[None, :], s, -jnp.inf)
+        if kv_len is not None:
+            s = jnp.where((kpos < kv_len)[None, None, None, None, :], s, -jnp.inf)
+        return s
+
+    if chunk and Sk > chunk:
+        n_chunks = Sk // chunk
+        assert Sk % chunk == 0
+
+        def body(carry, inputs):
+            m, l, acc = carry
+            kb, vb, ci = inputs
+            s = block_scores(kb, ci * chunk, chunk)        # [B,KV,G,Sq,C]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb)
+            acc = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l, acc), None
+
+        ks = k.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+        vs = v.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+        m0 = jnp.full((B, KV, G, Sq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, Sq, hd), v.dtype)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (ks, vs, jnp.arange(n_chunks)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    else:
+        s = block_scores(k, 0, Sk)                          # [B,KV,G,Sq,Sk]
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m = jnp.maximum(m, -1e30)  # rows fully masked (padding) stay finite
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        p = (p / jnp.maximum(l, 1e-30)).astype(v.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+
+
+def apply_attention(p, x, cfg, positions, *, causal=True, chunk=0,
+                    cache=None, cache_pos=None, cross_kv=None):
+    """Full attention block. ``cache`` = dict(k, v) [B,Smax,KV,hd] for decode
+    (updated functionally, returned). ``cross_kv`` = precomputed (k, v) for
+    encoder-decoder cross-attention (no rope on cross)."""
+    dt = x.dtype
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+        k, v = cross_kv
+        out = _sdpa(q, k, v, causal=False, chunk=chunk)
+        new_cache = cache
+    elif cache is not None:
+        q, k_new, v_new = _qkv(p, x, cfg, positions)
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), cache_pos, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), cache_pos, axis=1)
+        r = current_rules()
+        if r is not None and r.mesh is not None and r.kv_heads is None:
+            # few KV heads (not divisible by the model axis): shard the
+            # cache SEQUENCE instead (flash-decoding; GSPMD inserts the
+            # partial-softmax psums). Always on for decode; during prefill
+            # only when the total cache stack would blow HBM — the per-layer
+            # cache-write reshard it costs shows up in the collective term.
+            cache_total = (cfg.n_layers * cache["k"].size
+                           * cache["k"].dtype.itemsize * 2)
+            if x.shape[1] == 1 or cache_total > 8 * 2 ** 30:
+                k = shard(k, r.batch, r.kv_seq, None, None)
+                v = shard(v, r.batch, r.kv_seq, None, None)
+        new_cache = {"k": k, "v": v}
+        kv_len = cache_pos + x.shape[1]
+        out = _sdpa(q, k, v, causal=True, q_offset=cache_pos, kv_len=kv_len,
+                    chunk=chunk)
+    else:
+        q, k, v = _qkv(p, x, cfg, positions)
+        out = _sdpa(q, k, v, causal=causal, chunk=chunk)
+        new_cache = None
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    r = current_rules()
+    if r is not None and r.mesh is not None:
+        y = shard(y, r.batch, None, None)
+    return y, new_cache
+
+
+def init_cross_attention(key, cfg):
+    return init_attention(key, cfg)
+
+
+def cross_kv(p, enc_out, cfg):
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    return k, v
+
+
+# -- MLP -------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    p = {"wup": _normal(k1, (d_model, d_ff), s_in),
+         "wdown": _normal(k2, (d_ff, d_model), s_out)}
+    if activation in ("swiglu", "geglu"):
+        p["wgate"] = _normal(k3, (d_model, d_ff), s_in)
+    return p
+
+
+def mlp_param_specs(activation: str, rules):
+    from jax.sharding import PartitionSpec as P
+    tp = rules.tp
+    p = {"wup": P(None, tp), "wdown": P(tp, None)}
+    if activation in ("swiglu", "geglu"):
+        p["wgate"] = P(None, tp)
+    return p
+
+
+def apply_mlp(p, x, activation: str):
+    dt = x.dtype
+    up = jnp.einsum("bsd,df->bsf", x, p["wup"].astype(dt))
+    r = current_rules()
+    if r is not None and r.mesh is not None:
+        up = shard(up, r.batch, None, r.tp)
+    if activation == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["wgate"].astype(dt))
+        h = jax.nn.silu(gate) * up
+    elif activation == "geglu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["wgate"].astype(dt))
+        h = jax.nn.gelu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    y = jnp.einsum("bsf,fd->bsd", h, p["wdown"].astype(dt))
+    if r is not None and r.mesh is not None:
+        y = shard(y, r.batch, None, None)
+    return y
+
+
+# -- embeddings -------------------------------------------------------------------
+
+def init_embedding(key, vocab_padded: int, d_model: int):
+    # d^-0.5 keeps tied-head logits O(1) at init (gemma-style tying)
+    return {"tok": _normal(key, (vocab_padded, d_model), d_model ** -0.5)}
+
+
+def apply_embedding(p, tokens):
+    return p["tok"].astype(ACT_DTYPE)[tokens]
+
+
+def apply_lm_head(p_embed, p_head, x, tie: bool):
+    dt = x.dtype
+    if tie:
+        return jnp.einsum("bsd,vd->bsv", x, p_embed["tok"].astype(dt))
+    return jnp.einsum("bsd,dv->bsv", x, p_head["w"].astype(dt))

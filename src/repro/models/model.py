@@ -1,0 +1,486 @@
+"""Model assembly: config → params/apply for all 10 assigned architectures.
+
+Layer stacks scan over *layer groups* (one period of the hybrid pattern;
+1 layer for homogeneous archs) with params stacked [G, ...] — this keeps
+compile time flat in depth and makes the roofline's while-loop trip counts
+explicit (see launch/roofline.py). DeepSeekMoE's dense layer 0 is a prefix
+outside the scan.
+
+Decode maintains per-group state pytrees (KV caches for "attn" positions,
+conv+SSM state for "ssm" positions) scanned alongside the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.parallel.sharding import ShardingRules, current_rules, shard
+
+ACT = L.ACT_DTYPE
+VLM_PATCHES = 256        # stub frontend: patch embeddings prefix length
+ATTN_CHUNK = 2048        # flash-style KV chunking threshold/size
+
+
+def _use_moe(cfg: ArchConfig, global_layer: int) -> bool:
+    m = cfg.moe
+    if m is None:
+        return False
+    if global_layer == 0 and m.first_dense_ff:
+        return False
+    return (global_layer % m.every) == m.every - 1
+
+
+# -- init -----------------------------------------------------------------------
+
+def _init_sublayer(key, cfg: ArchConfig, kind: str, global_layer: int):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": L.init_norm(cfg.d_model, cfg.norm)}
+    if kind == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    else:
+        p["ssm"] = SSM.init_ssm(ks[0], cfg)
+    if kind == "attn" or cfg.family != "ssm":
+        p["norm2"] = L.init_norm(cfg.d_model, cfg.norm)
+        if _use_moe(cfg, global_layer):
+            p["moe"] = MOE.init_moe(ks[1], cfg.d_model, cfg.moe)
+        elif cfg.moe is not None and global_layer == 0 and cfg.moe.first_dense_ff:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.moe.first_dense_ff,
+                                  cfg.activation)
+        elif cfg.d_ff:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation)
+    if cfg.enc_layers and kind == "attn":
+        p["norm_x"] = L.init_norm(cfg.d_model, cfg.norm)
+        p["cross"] = L.init_cross_attention(ks[2], cfg)
+    return p
+
+
+def _sublayer_specs(cfg: ArchConfig, kind: str, global_layer: int,
+                    rules: ShardingRules):
+    p = {"norm1": {"scale": P(None)}}
+    if cfg.norm == "layernorm":
+        p["norm1"]["bias"] = P(None)
+    if kind == "attn":
+        p["attn"] = L.attention_param_specs(cfg, rules)
+    else:
+        p["ssm"] = SSM.ssm_param_specs(cfg, rules)
+    if kind == "attn" or cfg.family != "ssm":
+        p["norm2"] = dict(p["norm1"])
+        if _use_moe(cfg, global_layer):
+            p["moe"] = MOE.moe_param_specs(cfg.moe, rules)
+        elif cfg.moe is not None and global_layer == 0 and cfg.moe.first_dense_ff:
+            p["mlp"] = L.mlp_param_specs(cfg.activation, rules)
+        elif cfg.d_ff:
+            p["mlp"] = L.mlp_param_specs(cfg.activation, rules)
+    if cfg.enc_layers and kind == "attn":
+        p["norm_x"] = dict(p["norm1"])
+        p["cross"] = L.attention_param_specs(cfg, rules)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 8)
+    pat = cfg.layer_pattern()
+    G = cfg.n_layer_groups
+    params: dict = {"embed": L.init_embedding(keys[-1], cfg.vocab_padded,
+                                              cfg.d_model),
+                    "final_norm": L.init_norm(cfg.d_model, cfg.norm)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": L._normal(keys[-2],
+                                            (cfg.d_model, cfg.vocab_padded),
+                                            cfg.d_model ** -0.5)}
+    # prefix layers (deepseek dense layer 0)
+    prefix_n = 1 if (cfg.moe is not None and cfg.moe.first_dense_ff) else 0
+    if prefix_n:
+        params["prefix"] = [_init_sublayer(keys[0], cfg, pat[0], 0)]
+    # scanned groups: stack leaves over G groups
+    scanned_layers = cfg.n_layers - prefix_n
+    Gs = scanned_layers // len(pat)
+
+    def group_params(g):
+        ps = []
+        for i, kind in enumerate(pat):
+            gl = prefix_n + g * len(pat) + i
+            ps.append(_init_sublayer(keys[gl], cfg, kind, gl))
+        return ps
+
+    groups = [group_params(g) for g in range(Gs)]
+    params["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    if cfg.enc_layers:
+        enc = []
+        for e in range(cfg.enc_layers):
+            pe = {"norm1": L.init_norm(cfg.d_model, cfg.norm),
+                  "attn": L.init_attention(keys[cfg.n_layers + e % 4], cfg),
+                  "norm2": L.init_norm(cfg.d_model, cfg.norm),
+                  "mlp": L.init_mlp(jax.random.fold_in(key, 1000 + e),
+                                    cfg.d_model, cfg.d_ff, cfg.activation)}
+            enc.append(pe)
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        params["enc_norm"] = L.init_norm(cfg.d_model, cfg.norm)
+    return params
+
+
+def param_specs(cfg: ArchConfig, rules: ShardingRules) -> dict:
+    pat = cfg.layer_pattern()
+    specs: dict = {"embed": {"tok": P(rules.tp, None)},
+                   "final_norm": {"scale": P(None)}}
+    if cfg.norm == "layernorm":
+        specs["final_norm"]["bias"] = P(None)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = {"w": P(None, rules.tp)}
+    prefix_n = 1 if (cfg.moe is not None and cfg.moe.first_dense_ff) else 0
+    if prefix_n:
+        specs["prefix"] = [_sublayer_specs(cfg, pat[0], 0, rules)]
+    group = [_sublayer_specs(cfg, kind, prefix_n + i, rules)
+             for i, kind in enumerate(pat)]
+    # scanned leaves gain a leading group axis (unsharded)
+    specs["groups"] = jax.tree.map(
+        lambda s: P(None, *s), group, is_leaf=lambda x: isinstance(x, P))
+    if cfg.enc_layers:
+        enc = {"norm1": {"scale": P(None)},
+               "attn": L.attention_param_specs(cfg, rules),
+               "norm2": {"scale": P(None)},
+               "mlp": L.mlp_param_specs(cfg.activation, rules)}
+        if cfg.norm == "layernorm":
+            enc["norm1"]["bias"] = P(None)
+            enc["norm2"]["bias"] = P(None)
+        specs["encoder"] = jax.tree.map(
+            lambda s: P(None, *s), enc, is_leaf=lambda x: isinstance(x, P))
+        specs["enc_norm"] = dict(specs["final_norm"])
+    return specs
+
+
+# -- forward --------------------------------------------------------------------
+
+def _apply_sublayer(p, x, cfg: ArchConfig, kind: str, positions, *,
+                    causal=True, chunk=0, state=None, cache_pos=None,
+                    enc_out=None):
+    """Pre-norm residual sublayer. Returns (x, new_state, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    if kind == "attn":
+        if state is not None:
+            y, new_cache = L.apply_attention(
+                p["attn"], h, cfg, positions, causal=True, chunk=chunk,
+                cache=state["kv"], cache_pos=cache_pos)
+            new_state = dict(state, kv=new_cache)
+        else:
+            y, _ = L.apply_attention(p["attn"], h, cfg, positions,
+                                     causal=causal, chunk=chunk)
+            new_state = None
+        x = x + y
+        if enc_out is not None and "cross" in p:
+            hx = L.apply_norm(p["norm_x"], x, cfg.norm)
+            ckv = L.cross_kv(p["cross"], enc_out, cfg)
+            y, _ = L.apply_attention(p["cross"], hx, cfg, positions,
+                                     cross_kv=ckv)
+            x = x + y
+    else:
+        if state is not None and h.shape[1] == 1:      # decode
+            y, new_ssm = SSM.apply_ssm_decode(p["ssm"], h, cfg, state["ssm"])
+            new_state = dict(state, ssm=new_ssm)
+        elif state is not None:                         # prefill with state
+            y, new_ssm = SSM.apply_ssm(p["ssm"], h, cfg, return_state=True,
+                                       initial_state=state["ssm"])
+            new_state = dict(state, ssm=new_ssm)
+        else:
+            y = SSM.apply_ssm(p["ssm"], h, cfg)
+            new_state = None
+        x = x + y
+    if "norm2" in p:
+        h = L.apply_norm(p["norm2"], x, cfg.norm)
+        if "moe" in p:
+            r = current_rules()
+            if (r is not None and r.mesh is not None and r.experts
+                    and r.moe_impl == "shard_map"):
+                y, aux = MOE.apply_moe_shardmap(p["moe"], h, cfg.moe,
+                                                cfg.activation)
+            elif (r is not None and r.mesh is not None and r.experts
+                    and r.moe_impl == "all_to_all"):
+                y, aux = MOE.apply_moe_a2a(p["moe"], h, cfg.moe,
+                                           cfg.activation)
+            else:
+                y, aux = MOE.apply_moe(p["moe"], h, cfg.moe, cfg.activation)
+        elif "mlp" in p:
+            y = L.apply_mlp(p["mlp"], h, cfg.activation)
+        else:
+            y = jnp.zeros_like(x)
+        x = x + y
+    return x, new_state, aux
+
+
+def _group_states(cfg: ArchConfig, batch: int, cache_len: int):
+    """State pytree template for ONE group (list over in-group positions)."""
+    pat = cfg.layer_pattern()
+    states = []
+    for kind in pat:
+        if kind == "attn":
+            kv = {"k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), ACT),
+                  "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), ACT)}
+            states.append({"kv": kv})
+        else:
+            states.append({"ssm": SSM.init_ssm_state(cfg, batch, ACT)})
+    return states
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int):
+    Gs = _scanned_groups(cfg)
+    one = _group_states(cfg, batch, cache_len)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (Gs,) + x.shape), one)
+    state = {"groups": stacked}
+    if cfg.moe is not None and cfg.moe.first_dense_ff:
+        state["prefix"] = _group_states(cfg, batch, cache_len)[:1]
+    return state
+
+
+def _scanned_groups(cfg: ArchConfig) -> int:
+    prefix_n = 1 if (cfg.moe is not None and cfg.moe.first_dense_ff) else 0
+    return (cfg.n_layers - prefix_n) // len(cfg.layer_pattern())
+
+
+def _encode(params, cfg, frames):
+    """Encoder stack (seamless): non-causal attention over frame embeds."""
+    x = frames.astype(ACT)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], x.shape[:2])
+
+    def body(carry, p):
+        h = L.apply_norm(p["norm1"], carry, cfg.norm)
+        y, _ = L.apply_attention(p["attn"], h, cfg, positions, causal=False,
+                                 chunk=ATTN_CHUNK if S > 4096 else 0)
+        carry = carry + y
+        h = L.apply_norm(p["norm2"], carry, cfg.norm)
+        carry = carry + L.apply_mlp(p["mlp"], h, cfg.activation)
+        return carry, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def forward(params, cfg: ArchConfig, batch: dict, *, remat: str = "none"):
+    """Training/prefill forward → logits [B,S,vocab_padded], aux loss.
+
+    batch keys: tokens [B,S]; vlm: patches [B,256,D]; encdec: frames
+    [B,S_enc,D] (tokens are then the decoder side).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.apply_embedding(params["embed"], tokens)
+    if cfg.modality == "vlm" and "patches" in batch:
+        npatch = batch["patches"].shape[1]
+        x = jnp.concatenate([batch["patches"].astype(ACT),
+                             x[:, npatch:]], axis=1)
+    x = shard_batch(x)
+    enc_out = None
+    if cfg.enc_layers:
+        enc_out = _encode(params, cfg, batch["frames"])
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    chunk = ATTN_CHUNK if S > 4096 else 0
+    pat = cfg.layer_pattern()
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if "prefix" in params:
+        for i, p in enumerate(params["prefix"]):
+            x, _, aux = _apply_sublayer(p, x, cfg, pat[i], positions,
+                                        chunk=chunk, enc_out=enc_out)
+            aux_total = aux_total + aux
+
+    def group_fn(x, gp):
+        aux_g = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(pat):
+            x, _, aux = _apply_sublayer(gp[i], x, cfg, kind, positions,
+                                        chunk=chunk, enc_out=enc_out)
+            aux_g = aux_g + aux
+        return x, aux_g
+
+    if remat != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if remat == "dots" else None)
+        group_fn = jax.checkpoint(group_fn, policy=policy,
+                                  prevent_cse=False)
+
+    def body(carry, gp):
+        x, aux_acc = carry
+        x, aux_g = group_fn(x, gp)
+        return (shard_batch(x), aux_acc + aux_g), None
+
+    (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["groups"])
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.apply_lm_head(params["embed"], params.get("lm_head"), x,
+                             cfg.tie_embeddings)
+    return logits, aux_total
+
+
+def shard_batch(x):
+    """Residual-stream constraint: DP batch + (optionally) Megatron-SP seq.
+
+    With rules.seq set, GSPMD keeps the residual sequence-sharded over the
+    model axis between blocks and converts the TP all-reduces into
+    all-gather + reduce-scatter pairs (activation memory ÷ model_size)."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    if (x.ndim >= 3 and r.seq is not None
+            and x.shape[1] % r.mesh.shape["model"] == 0 and x.shape[1] > 1):
+        return shard(x, r.batch, r.seq, *([None] * (x.ndim - 2)))
+    return shard(x, r.batch, *([None] * (x.ndim - 1)))
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *, remat: str = "none",
+            aux_weight: float = 0.01):
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    r = current_rules()
+    if r is not None and r.mesh is not None:
+        lf = shard(lf, r.batch, None, r.tp)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    if r is not None and r.mesh is not None:
+        # keep the one-hot vocab-sharded — replicated it is B·S·V floats
+        onehot = shard(onehot, r.batch, None, r.tp)
+    gold = jnp.sum(lf * onehot, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# -- serving --------------------------------------------------------------------
+
+def prefill(params, cfg: ArchConfig, batch: dict, cache_len: int,
+            *, chunks: int = 1):
+    """Run the prompt, return (last-token logits, decode state, next_pos).
+
+    ``chunks > 1`` enables chunked prefill (vLLM-style): the prompt is
+    processed in sequential super-chunks against the growing KV/SSM state,
+    dividing the activation live-set by ``chunks`` — required to serve the
+    largest archs on a single pod.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    assert S % chunks == 0
+    Sc = S // chunks
+    state = init_decode_state(cfg, B, cache_len)
+    x_full = L.apply_embedding(params["embed"], tokens)
+    if cfg.modality == "vlm" and "patches" in batch:
+        npatch = batch["patches"].shape[1]
+        x_full = jnp.concatenate([batch["patches"].astype(ACT),
+                                  x_full[:, npatch:]], axis=1)
+    x_full = shard_batch(x_full)
+    enc_out = _encode(params, cfg, batch["frames"]) if cfg.enc_layers else None
+    pat = cfg.layer_pattern()
+
+    x_last = None
+    for c in range(chunks):
+        x = x_full[:, c * Sc:(c + 1) * Sc]
+        positions = jnp.broadcast_to(
+            (c * Sc + jnp.arange(Sc))[None, :], (B, Sc))
+        chunk = ATTN_CHUNK if Sc > 4096 else 0
+
+        if "prefix" in params:
+            new_prefix = []
+            for i, p in enumerate(params["prefix"]):
+                x, st, _ = _apply_sublayer(p, x, cfg, pat[i], positions,
+                                           chunk=chunk,
+                                           state=state["prefix"][i],
+                                           cache_pos=c * Sc, enc_out=enc_out)
+                new_prefix.append(st)
+            state["prefix"] = new_prefix
+
+        def body(x, inp):
+            gp, gst = inp
+            new_states = []
+            for i, kind in enumerate(pat):
+                x, st, _ = _apply_sublayer(gp[i], x, cfg, kind, positions,
+                                           chunk=chunk, state=gst[i],
+                                           cache_pos=c * Sc, enc_out=enc_out)
+                new_states.append(st)
+            return x, new_states
+
+        x, gstates = jax.lax.scan(body, x,
+                                  (params["groups"], state["groups"]))
+        state["groups"] = gstates
+        x_last = x
+    x = L.apply_norm(params["final_norm"], x_last[:, -1:], cfg.norm)
+    logits = L.apply_lm_head(params["embed"], params.get("lm_head"), x,
+                             cfg.tie_embeddings)
+    return logits, state, S
+
+
+def decode_step(params, cfg: ArchConfig, token, state, pos, *, enc_out=None):
+    """One decode step. token [B,1] int32, pos scalar int32 → logits, state."""
+    B = token.shape[0]
+    x = L.apply_embedding(params["embed"], token)
+    x = shard_batch(x)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    pat = cfg.layer_pattern()
+
+    if "prefix" in params:
+        new_prefix = []
+        for i, p in enumerate(params["prefix"]):
+            x, st, _ = _apply_sublayer(p, x, cfg, pat[i], positions,
+                                       state=state["prefix"][i],
+                                       cache_pos=pos, enc_out=enc_out)
+            new_prefix.append(st)
+        state = dict(state, prefix=new_prefix)
+
+    def body(x, inp):
+        gp, gst = inp
+        new_states = []
+        for i, kind in enumerate(pat):
+            x, st, _ = _apply_sublayer(gp[i], x, cfg, kind, positions,
+                                       state=gst[i], cache_pos=pos,
+                                       enc_out=enc_out)
+            new_states.append(st)
+        return x, new_states
+
+    x, gstates = jax.lax.scan(body, x, (params["groups"], state["groups"]))
+    state = dict(state, groups=gstates)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.apply_lm_head(params["embed"], params.get("lm_head"), x,
+                             cfg.tie_embeddings)
+    return logits, state
+
+
+# -- input specs (dry-run / data pipeline) ----------------------------------------
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell, *, per_device_batch=None
+                ) -> dict:
+    """ShapeDtypeStructs for every model input of a shape cell (no alloc)."""
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    if cell.kind == "train":
+        spec = {"tokens": jax.ShapeDtypeStruct((B, _dec_len(cfg, S)), i32),
+                "labels": jax.ShapeDtypeStruct((B, _dec_len(cfg, S)), i32)}
+        if cfg.enc_layers:
+            spec["frames"] = jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), ACT)
+        if cfg.modality == "vlm":
+            spec["patches"] = jax.ShapeDtypeStruct((B, VLM_PATCHES,
+                                                    cfg.d_model), ACT)
+        return spec
+    if cell.kind == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((B, _dec_len(cfg, S)), i32)}
+        if cfg.enc_layers:
+            spec["frames"] = jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), ACT)
+        if cfg.modality == "vlm":
+            spec["patches"] = jax.ShapeDtypeStruct((B, VLM_PATCHES,
+                                                    cfg.d_model), ACT)
+        return spec
+    # decode: one new token against a cache of length S
+    spec = {"token": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+    if cfg.enc_layers:
+        spec["enc_out"] = jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), ACT)
+    return spec
+
+
+def _dec_len(cfg: ArchConfig, S: int) -> int:
+    return S // 2 if cfg.enc_layers else S

@@ -1,0 +1,215 @@
+"""Mamba-2 SSD (state-space duality) block — chunked matmul form + O(1) decode.
+
+The SSD forward computes, per head h with state size N and head dim P:
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · B_t ⊗ x_t          (state [N,P])
+    y_t = C_t · h_t + D · x_t
+in chunked form (chunk Q): an intra-chunk attention-like term
+(C_i·B_j masked by the decay kernel L_ij) plus an inter-chunk scan carrying
+the state — both MXU-friendly einsums, following Dao & Gu (arXiv:2405.21060),
+adapted so the head dimension TP-shards over "model".
+
+Decode keeps per-layer state: conv window [B, W-1, d_conv_ch] + SSM state
+[B, H, P, N]; one token costs O(H·P·N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard, current_rules
+from repro.models.layers import _normal
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def init_ssm(key, cfg):
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner, H, conv_ch = dims(cfg)
+    GN = s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    sc = D ** -0.5
+    return {
+        "w_z": _normal(ks[0], (D, d_inner), sc),
+        "w_x": _normal(ks[1], (D, d_inner), sc),
+        "w_B": _normal(ks[2], (D, GN), sc),
+        "w_C": _normal(ks[3], (D, GN), sc),
+        "w_dt": _normal(ks[4], (D, H), sc),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "conv_w": _normal(ks[5], (s.conv_width, conv_ch), 0.5),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "w_out": _normal(ks[6], (d_inner, D), d_inner ** -0.5),
+    }
+
+
+def ssm_param_specs(cfg, rules):
+    from jax.sharding import PartitionSpec as P
+    tp = rules.tp
+    return {
+        "w_z": P(None, tp), "w_x": P(None, tp),
+        "w_B": P(None, None), "w_C": P(None, None),
+        "w_dt": P(None, tp), "dt_bias": P(tp), "A_log": P(tp), "D": P(tp),
+        "conv_w": P(None, None), "conv_b": P(None),
+        "w_out": P(tp, None),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b, state=None):
+    """Depthwise causal conv over [B,S,Ch]; returns (out, new_state)."""
+    W = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for w in range(W):  # W is 4: unrolled taps fuse into one pass
+        out = out + xp[:, w: w + xbc.shape[1]] * conv_w[w].astype(xbc.dtype)
+    out = out + conv_b.astype(xbc.dtype)
+    new_state = xp[:, xp.shape[1] - (W - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def _proj_in(p, x, cfg):
+    dt = x.dtype
+    s = cfg.ssm
+    d_inner, H, _ = dims(cfg)
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"].astype(dt))
+    xin = jnp.einsum("bsd,di->bsi", x, p["w_x"].astype(dt))
+    Bv = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(dt))
+    Cv = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(dt))
+    dtv = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt)).astype(jnp.float32)
+        + p["dt_bias"])
+    r = current_rules()
+    if r is not None and r.mesh is not None:
+        z = shard(z, r.batch, None, r.tp)
+        xin = shard(xin, r.batch, None, r.tp)
+    return z, xin, Bv, Cv, dtv
+
+
+def apply_ssm(p, x, cfg, *, return_state: bool = False, initial_state=None):
+    """Training/prefill forward, chunked SSD. x [B,S,D] → [B,S,D]
+    (+ final {conv, h} state when ``return_state``). ``initial_state``
+    continues from a previous prefill chunk (chunked prefill)."""
+    s = cfg.ssm
+    B_, S_orig, D = x.shape
+    d_inner, H, conv_ch = dims(cfg)
+    P_, N, Q = s.head_dim, s.d_state, s.chunk
+    dt_ = x.dtype
+
+    z, xin, Bv, Cv, dtv = _proj_in(p, x, cfg)
+    xbc = jnp.concatenate([xin, Bv, Cv], axis=-1)
+    xbc, conv_state = _causal_conv(
+        xbc, p["conv_w"], p["conv_b"],
+        initial_state["conv"] if initial_state is not None else None)
+    xin, Bv, Cv = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + N],
+                   xbc[..., d_inner + N:])
+
+    # ragged prompts: pad to a chunk multiple with dt = 0 (decay exp(0·A)=1,
+    # update dt·B⊗x = 0) so the padded tail is an exact no-op on the state.
+    pad = (-S_orig) % Q
+    if pad:
+        padw = [(0, 0), (0, pad), (0, 0)]
+        xin = jnp.pad(xin, padw)
+        Bv = jnp.pad(Bv, padw)
+        Cv = jnp.pad(Cv, padw)
+        dtv = jnp.pad(dtv, padw)
+    S = S_orig + pad
+    nC = S // Q
+
+    xh = xin.reshape(B_, nC, Q, H, P_)
+    Bc = Bv.reshape(B_, nC, Q, N)          # n_groups=1 → broadcast over heads
+    Cc = Cv.reshape(B_, nC, Q, N)
+    dtc = dtv.reshape(B_, nC, Q, H)
+    A = -jnp.exp(p["A_log"])               # [H], negative
+
+    a = dtc * A                            # log-decay per step [B,nC,Q,H]
+    cum = jnp.cumsum(a, axis=2)            # within-chunk cumulative decay
+    # intra-chunk: y_i += Σ_{j≤i} (C_i·B_j) exp(cum_i − cum_j) dt_j x_j
+    Sij = jnp.einsum("bcin,bcjn->bcij", Cc, Bc).astype(jnp.float32)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [B,nC,i,j,H]
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(decay), 0.0)
+    M = Sij[..., None] * L                                   # [B,nC,i,j,H]
+    xdt = xh * dtc[..., None].astype(dt_)                    # dt_j x_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M.astype(dt_), xdt)
+
+    # chunk summaries: state contribution of chunk c
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum)                 # decay j→chunk end
+    state_c = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                         w_end.astype(dt_) * dtc.astype(dt_), Bc, xh)
+    chunk_decay = jnp.exp(jnp.sum(a, axis=2))                # [B,nC,H]
+
+    # inter-chunk scan: h_c = decay_c · h_{c-1} + state_c
+    def scan_body(h, inp):
+        st, dec = inp
+        h_new = h * dec[:, :, None, None].astype(h.dtype) + st
+        return h_new, h
+    init = (initial_state["h"].astype(dt_) if initial_state is not None
+            else jnp.zeros((B_, H, N, P_), dt_))
+    h_last, h_prev = jax.lax.scan(
+        scan_body, init,
+        (state_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                 # [B,nC,H,N,P]
+
+    # inter-chunk output: C_i · (decay to i) · h_{c-1}
+    w_in = jnp.exp(cum)                                      # decay start→i
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", Cc, h_prev,
+                         w_in.astype(dt_))
+    y = (y_intra + y_inter).reshape(B_, S, H, P_)
+    y = y + xin.reshape(B_, S, H, P_) * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B_, S, d_inner)[:, :S_orig] * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(dt_))
+    r = current_rules()
+    if r is not None and r.mesh is not None:
+        out = shard(out, r.batch, None, None)
+    if return_state:
+        return out, {"conv": conv_state, "h": h_last}
+    return out
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_inner, H, conv_ch = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "h": jnp.zeros((batch, H, s.d_state, s.head_dim), dtype),
+    }
+
+
+def apply_ssm_decode(p, x, cfg, state):
+    """One-token decode. x [B,1,D] → ([B,1,D], new_state)."""
+    s = cfg.ssm
+    B_, _, D = x.shape
+    d_inner, H, conv_ch = dims(cfg)
+    P_, N = s.head_dim, s.d_state
+    dt_ = x.dtype
+
+    z, xin, Bv, Cv, dtv = _proj_in(p, x, cfg)
+    xbc = jnp.concatenate([xin, Bv, Cv], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state["conv"])
+    xin, Bv, Cv = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + N],
+                   xbc[..., d_inner + N:])
+
+    xh = xin.reshape(B_, H, P_)
+    Bt, Ct, dtt = Bv[:, 0], Cv[:, 0], dtv[:, 0]              # [B,N],[B,N],[B,H]
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dtt * A)                                   # [B,H]
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dtt.astype(dt_), Bt, xh)
+    h = state["h"] * dec[:, :, None, None].astype(dt_) + upd
+    y = jnp.einsum("bn,bhnp->bhp", Ct, h)
+    y = y + xh * p["D"].astype(dt_)[None, :, None]
+    y = y.reshape(B_, 1, d_inner) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(dt_))
+    return out, {"conv": conv_state, "h": h}

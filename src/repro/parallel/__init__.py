@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (ShardingRules, make_rules, shard,
+                                     use_shardings, current_mesh,
+                                     param_shardings, batch_axes)

@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules for the LM zoo (DP/TP/EP/SP + pod).
+
+The mesh is (pod, data, model) — multi-pod — or (data, model). Parameters
+and activations carry *logical* axes; `ShardingRules` resolves them to mesh
+axes per architecture:
+
+  batch   → ("pod","data")          (DP; pod is an outer DP axis)
+  heads   → "model" when n_heads % model_size == 0, else replicated
+            (documented per-arch in configs/*.py notes)
+  mlp/vocab/ssm-inner → "model"     (Megatron TP)
+  experts → "model" when n_experts % model_size == 0 (EP), else expert FFNs
+            TP-sharded inside each expert
+  kv_seq  → "model" for decode KV caches (flash-decoding style: the softmax
+            partial reductions are inserted by GSPMD)
+
+`shard(x, *logical)` applies with_sharding_constraint only when a mesh
+context is active, so the same model code runs unsharded on one CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh | None
+    batch: tuple | None            # mesh axes for the batch dim
+    tp: str | None                 # "model" or None
+    heads: str | None              # q-head sharding
+    kv_heads: str | None
+    experts: str | None            # EP axis
+    expert_tp: str | None          # TP inside experts (granite fallback)
+    kv_seq: str | None             # decode cache sequence sharding
+    seq: str | None = None         # Megatron-SP: residual seq sharding
+    moe_impl: str = "gspmd"        # gspmd | shard_map (§Perf hillclimb B)
+
+    def spec(self, *axes) -> P:
+        return P(*axes)
+
+
+def make_rules(mesh: Mesh | None, cfg=None, *, seq_shard: bool = False,
+               strategy: str = "tp", moe_impl: str = "gspmd") -> ShardingRules:
+    """strategy "tp" = Megatron TP over the model axis (default);
+    "fsdp_dp" = the model axis joins the batch axes (pure DP) and parameters
+    are fully sharded (ZeRO-3) — no per-activation TP collectives, only
+    per-layer param all-gathers. The right choice is model-size dependent
+    (§Perf hillclimb A)."""
+    if mesh is None:
+        return ShardingRules(None, None, None, None, None, None, None, None)
+    model = "model" if "model" in mesh.axis_names else None
+    msize = mesh.shape["model"] if model else 1
+    if strategy == "fsdp_dp":
+        batch = ("data", "model")
+        experts = None
+        if (cfg is not None and cfg.moe is not None and model
+                and moe_impl == "all_to_all"
+                and cfg.moe.n_experts % msize == 0):
+            experts = model      # EP via a2a rides the model axis
+        return ShardingRules(mesh=mesh, batch=batch, tp=None, heads=None,
+                             kv_heads=None, experts=experts, expert_tp=None,
+                             kv_seq=None, seq=None, moe_impl=moe_impl)
+    batch = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    heads = kv_heads = None
+    experts = expert_tp = None
+    if cfg is not None and model:
+        if cfg.n_heads and cfg.n_heads % msize == 0:
+            heads = model
+            if cfg.n_kv_heads and cfg.n_kv_heads % msize == 0:
+                kv_heads = model
+        if cfg.moe is not None:
+            if cfg.moe.n_experts % msize == 0:
+                experts = model
+            else:
+                expert_tp = model
+    return ShardingRules(mesh=mesh, batch=batch, tp=model, heads=heads,
+                         kv_heads=kv_heads, experts=experts,
+                         expert_tp=expert_tp, kv_seq=model,
+                         seq=model if seq_shard else None,
+                         moe_impl=moe_impl)
+
+
+@contextlib.contextmanager
+def use_shardings(mesh: Mesh | None, rules: ShardingRules | None):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        if mesh is not None:
+            with mesh:   # classic mesh context (NamedShardings carry the mesh anyway)
+                yield
+        else:
+            yield
+    finally:
+        _STATE.rules = prev
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_STATE, "rules", None)
+
+
+def current_mesh() -> Mesh | None:
+    r = current_rules()
+    return r.mesh if r else None
+
+
+def batch_axes() -> tuple | None:
+    r = current_rules()
+    return r.batch if r else None
+
+
+def shard(x, *axes):
+    """with_sharding_constraint by resolved logical axes; no-op without mesh.
+
+    ``axes`` entries are already-resolved mesh axes (strings/tuples) or None.
+    """
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*axes)))
+
+
+def param_shardings(mesh: Mesh, rules: ShardingRules, param_specs):
+    """Map a pytree of PartitionSpecs to NamedShardings."""
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_spec(spec: P, shape, mesh: Mesh, axes=("pod", "data")) -> P:
+    """ZeRO/FSDP: additionally shard the first free, divisible dim over the
+    DP axes. Used for optimizer states (ZeRO-1) and, with ``fsdp``, for the
+    parameters themselves (GSPMD inserts the per-layer all-gathers)."""
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    dp = 1
+    for a in axes:
+        dp *= mesh.shape[a]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for d, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % dp == 0 and s >= dp:
+            entries[d] = axes if len(axes) > 1 else axes[0]
+            return P(*entries)
+    return spec
+
+
+def zero_shardings(mesh: Mesh, param_spec_tree, params_struct):
+    """NamedShardings with DP-dim sharding added per leaf (ZeRO layout)."""
+    def one(spec, ref):
+        return NamedSharding(mesh, zero_spec(spec, ref.shape, mesh))
+    return jax.tree.map(one, param_spec_tree, params_struct,
+                        is_leaf=lambda x: isinstance(x, P))

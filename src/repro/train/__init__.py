@@ -1,0 +1,3 @@
+from repro.train.optim import AdamWConfig, init_opt_state, apply_updates, lr_at
+from repro.train.train_step import TrainConfig, make_train_step, init_train_state
+from repro.train.data import DataConfig, batch_at, extra_inputs

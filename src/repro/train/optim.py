@@ -1,0 +1,91 @@
+"""AdamW with f32 master state, global-norm clipping, and LR schedules.
+
+Pure-pytree implementation (no optax dependency): state = (step, mu, nu,
+master). Params may be bf16; the master copy keeps f32 precision and the
+cast back to param dtype happens once per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    keep_master: bool = True     # f32 master copy (off → update in param dtype)
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+    master: dict | None
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup → cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.minimum(warm, cos)
+
+
+def init_opt_state(cfg: AdamWConfig, params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # copy=True: master must not alias the params buffer (both get donated)
+    master = (jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True),
+                           params)
+              if cfg.keep_master else None)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, st: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    step = st.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    ref = st.master if cfg.keep_master else params
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                        + cfg.weight_decay * pf)
+        return pf, m, v
+
+    out = jax.tree.map(upd, ref, grads, st.mu, st.nu)
+    new_master = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(
+        lambda pf, p: pf.astype(p.dtype), new_master, params)
+    new_state = OptState(step=step, mu=new_mu, nu=new_nu,
+                         master=new_master if cfg.keep_master else None)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,2 @@
+from repro.utils.tree import tree_bytes, tree_count, tree_cast
+from repro.utils.timing import Timer

@@ -1,0 +1,45 @@
+"""Wall-clock timing helpers (used by benchmarks and the train driver)."""
+from __future__ import annotations
+
+import time
+
+
+class Timer:
+    """Context-manager timer; ``with Timer() as t: ...; t.seconds``."""
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self._t0
+        return False
+
+
+class StepTimer:
+    """EWMA step timer with straggler flagging.
+
+    Used by the train/layout drivers: each rank (in a real deployment, each
+    host) records its per-step wall time; a step slower than
+    ``threshold × ewma`` is flagged as a straggler event. On this single-host
+    container the monitor exercises the same code path with one rank.
+    """
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ewma = None
+        self.straggler_events = 0
+        self.steps = 0
+
+    def record(self, seconds: float) -> bool:
+        """Record one step; returns True if this step is a straggler."""
+        self.steps += 1
+        if self.ewma is None:
+            self.ewma = seconds
+            return False
+        is_straggler = seconds > self.threshold * self.ewma
+        if is_straggler:
+            self.straggler_events += 1
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * seconds
+        return is_straggler

@@ -1,0 +1,30 @@
+"""Small pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of elements across all leaves."""
+    return int(sum(np.prod(x.shape) if hasattr(x, "shape") else 1
+                   for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all leaves (shape/dtype based, no materialization)."""
+    tot = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            tot += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return tot
+
+
+def tree_cast(tree, dtype):
+    """Cast all floating-point leaves to ``dtype``."""
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(_cast, tree)

@@ -1,0 +1,72 @@
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.graphs import generators as G, build_graph
+from repro.core import gila
+from repro.core.schedule import make_schedule
+
+
+def test_paper_k_schedule():
+    # exactly the paper's §3.4 table
+    assert gila.paper_k_schedule(999) == 6
+    assert gila.paper_k_schedule(1_000) == 5
+    assert gila.paper_k_schedule(4_999) == 5
+    assert gila.paper_k_schedule(5_000) == 4
+    assert gila.paper_k_schedule(9_999) == 4
+    assert gila.paper_k_schedule(10_000) == 3
+    assert gila.paper_k_schedule(99_999) == 3
+    assert gila.paper_k_schedule(100_000) == 2
+    assert gila.paper_k_schedule(999_999) == 2
+    assert gila.paper_k_schedule(1_000_000) == 1
+
+
+def test_khop_neighbors_match_bfs():
+    import networkx as nx
+    e, n = G.gnp(60, 3.0, 7)
+    nxg = nx.Graph(e.tolist())
+    idx, mask = gila.khop_neighbors(e, n, k=2, cap=n)
+    for v in range(n):
+        if v not in nxg:
+            continue
+        expect = {u for u, d in
+                  nx.single_source_shortest_path_length(nxg, v, 2).items()
+                  if 0 < d <= 2}
+        got = set(idx[v][mask[v]].tolist())
+        assert got == expect, (v, got, expect)
+
+
+def test_khop_cap_respected():
+    e, n = G.scale_free(300, 4, 0)
+    idx, mask = gila.khop_neighbors(e, n, k=3, cap=16)
+    assert mask.sum(axis=1).max() <= 16
+
+
+def test_exact_vs_neighbor_forces_agree_on_full_lists():
+    """With cap ≥ n and k ≥ diameter, neighbor mode equals exact mode
+    (minus the self term, which is zero anyway)."""
+    e, n = G.grid(6, 6)
+    g = build_graph(e, n, n_pad=64)
+    idx, mask = gila.khop_neighbors(e, n, k=12, cap=n)
+    nbr_idx, nbr_mask = gila.pad_neighbors(idx, mask, g.n_pad)
+    pos = gila.random_init(g, 3.0, 0)
+    params = jnp.asarray([1.0, 1.0, 1e-3], jnp.float32)
+    f_exact = gila.gila_forces(g, pos, nbr_idx, nbr_mask, params, mode="exact")
+    f_nbr = gila.gila_forces(g, pos, nbr_idx, nbr_mask, params, mode="neighbor")
+    np.testing.assert_allclose(np.asarray(f_exact), np.asarray(f_nbr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_layout_reduces_stress():
+    from repro.graphs.metrics import sampled_stress
+    e, n = G.grid(10, 10)
+    g = build_graph(e, n)
+    pos0 = gila.random_init(g, 5.0, 3)
+    sched = make_schedule(0, 1, g.n, g.m)
+    pos1 = gila.gila_layout(g, pos0, jnp.zeros((g.n_pad, 1), jnp.int32),
+                            jnp.zeros((g.n_pad, 1), bool), mode="exact",
+                            iters=200, temp0=2.0, temp_decay=0.98,
+                            ideal_len=1.0, rep_const=1.0)
+    s0 = sampled_stress(np.asarray(pos0)[:n], e, n)
+    s1 = sampled_stress(np.asarray(pos1)[:n], e, n)
+    assert s1 < s0 * 0.5, (s0, s1)

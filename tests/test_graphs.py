@@ -1,0 +1,80 @@
+import numpy as np
+import pytest
+
+from repro.graphs import generators as G, build_graph, unique_edges, push_max
+from repro.graphs import metrics as M
+
+
+def test_generators_basic():
+    for name, edges, n in G.regulargraphs_suite(small=True):
+        assert edges.shape[1] == 2
+        assert edges.min() >= 0 and edges.max() < n
+        # no self loops, no duplicates
+        assert (edges[:, 0] != edges[:, 1]).all()
+        assert len(np.unique(edges, axis=0)) == len(edges)
+
+
+def test_padded_graph_roundtrip():
+    e, n = G.grid(7, 5)
+    g = build_graph(e, n)
+    assert g.n == n and g.m == len(e)
+    back = unique_edges(g)
+    assert np.array_equal(np.sort(back, axis=0), np.sort(e, axis=0))
+    # degree sum = 2m
+    assert int(g.degrees().sum()) == 2 * g.m
+
+
+def test_push_max_is_one_hop_max():
+    import networkx as nx
+    e, n = G.gnp(40, 4.0, 3)
+    g = build_graph(e, n)
+    import jax.numpy as jnp
+    vals = jnp.asarray(np.arange(g.n_pad), jnp.int32)
+    out = np.asarray(push_max(g, vals))
+    nxg = nx.Graph(e.tolist())
+    for v in range(n):
+        nbrs = list(nxg.neighbors(v)) if v in nxg else []
+        expect = max(nbrs) if nbrs else -1
+        assert out[v] == expect, (v, out[v], expect)
+
+
+def test_crossings_grid_layout_zero():
+    e, n = G.grid(6, 6)
+    xs, ys = np.meshgrid(np.arange(6), np.arange(6))
+    pos = np.stack([xs.ravel(), ys.ravel()], 1).astype(np.float32)
+    assert M.count_crossings(pos, e) == 0
+    assert M.neld(pos, e) == 0.0
+
+
+def test_crossings_match_bruteforce():
+    rng = np.random.default_rng(1)
+    e, n = G.gnp(24, 3.0, 2)
+    pos = rng.random((n, 2)).astype(np.float32)
+
+    def brute(pos, edges):
+        def o(p, q, r):
+            return (q[0]-p[0])*(r[1]-p[1])-(q[1]-p[1])*(r[0]-p[0])
+        cnt = 0
+        for i in range(len(edges)):
+            for j in range(i + 1, len(edges)):
+                a, b = edges[i], edges[j]
+                if len({a[0], a[1], b[0], b[1]}) < 4:
+                    continue
+                if (o(pos[a[0]], pos[a[1]], pos[b[0]]) *
+                        o(pos[a[0]], pos[a[1]], pos[b[1]]) < 0 and
+                        o(pos[b[0]], pos[b[1]], pos[a[0]]) *
+                        o(pos[b[0]], pos[b[1]], pos[a[1]]) < 0):
+                    cnt += 1
+        return cnt
+
+    assert M.count_crossings(pos, e) == brute(pos, e)
+
+
+def test_bfs_distances_match_networkx():
+    import networkx as nx
+    e, n = G.scale_free(60, 2, 4)
+    D = M.bfs_distances(e, n, np.array([0, 5]))
+    nxg = nx.Graph(e.tolist())
+    sp = nx.single_source_shortest_path_length(nxg, 0)
+    for v in range(n):
+        assert D[0][v] == sp.get(v, -1)

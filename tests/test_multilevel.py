@@ -1,0 +1,89 @@
+"""End-to-end Multi-GiLA pipeline tests (the paper's quality claims, scaled
+to CI sizes)."""
+import numpy as np
+import pytest
+
+from repro.graphs import generators as G, build_graph
+from repro.graphs.metrics import cre, neld, sampled_stress
+from repro.core import multigila_layout, LayoutConfig
+from repro.core.pruning import prune_degree_one, reinsert
+from repro.core.solar_placer import solar_placer
+from repro.core import run_merger, next_level
+
+
+def test_grid_layout_quality():
+    """Paper Table 1: grids draw crossing-free (CRE 0.00 for Grid_20_20)."""
+    e, n = G.grid(12, 12)
+    pos, stats = multigila_layout(e, n, LayoutConfig(seed=1))
+    assert cre(pos, e) < 0.05
+    assert neld(pos, e) < 0.45
+
+
+def test_multilevel_beats_flat_on_mesh():
+    """The paper's core claim: the hierarchy mitigates GiLA's locality
+    approximation — multilevel stress ≤ flat stress on regular graphs."""
+    e, n = G.sierpinski(5)
+    p_ml, _ = multigila_layout(e, n, LayoutConfig(engine="multigila", seed=2))
+    p_fl, _ = multigila_layout(e, n, LayoutConfig(engine="flat", seed=2))
+    s_ml = sampled_stress(p_ml, e, n)
+    s_fl = sampled_stress(p_fl, e, n)
+    assert s_ml < s_fl, (s_ml, s_fl)
+
+
+def test_pruning_roundtrip():
+    e, n = G.with_degree_one_fringe(*G.grid(8, 8), frac=0.4, seed=1)
+    pr = prune_degree_one(e, n)
+    assert pr.n < n
+    # host masses absorb the pruned leaves
+    assert abs(float(pr.mass.sum()) - n) < 1e-6
+    pos_kept = np.random.default_rng(0).random((pr.n, 2)).astype(np.float32)
+    pos = reinsert(pr, pos_kept, pr.edges)
+    assert pos.shape == (n, 2)
+    # kept vertices keep their positions
+    np.testing.assert_allclose(pos[pr.old_of_new], pos_kept[: pr.n])
+    # leaves land near their hosts (≤ host's mean edge length)
+    for leaf, host in zip(pr.leaves[:20], pr.leaf_host[:20]):
+        d = np.linalg.norm(pos[leaf] - pos[host])
+        assert 0 < d < 5.0
+
+
+def test_disconnected_components_packed():
+    e1, n1 = G.grid(5, 5)
+    e2, n2 = G.tree(3, 3)
+    e = np.concatenate([e1, e2 + n1], axis=0)
+    n = n1 + n2
+    pos, _ = multigila_layout(e, n, LayoutConfig(seed=0))
+    assert pos.shape == (n, 2)
+    # components do not overlap: bounding boxes disjoint
+    b1 = (pos[:n1].min(0), pos[:n1].max(0))
+    b2 = (pos[n1:].min(0), pos[n1:].max(0))
+    sep_x = b1[1][0] < b2[0][0] or b2[1][0] < b1[0][0]
+    sep_y = b1[1][1] < b2[0][1] or b2[1][1] < b1[0][1]
+    assert sep_x or sep_y
+
+
+def test_placer_puts_suns_at_coarse_positions():
+    e, n = G.grid(10, 10)
+    g = build_graph(e, n)
+    st = run_merger(g, seed=3)
+    cg, info = next_level(g, st)
+    rng = np.random.default_rng(0)
+    coarse_pos = rng.random((cg.n_pad, 2)).astype(np.float32) * 10
+    pos = solar_placer(g, info, coarse_pos, seed=0)
+    pos = np.asarray(pos)
+    suns = np.nonzero((info.state == 1) & np.asarray(g.vmask))[0]
+    for s in suns[:20]:
+        np.testing.assert_allclose(pos[s], coarse_pos[info.parent_coarse[s]],
+                                   atol=1e-5)
+    # members land within a few ideal lengths of their sun
+    members = np.nonzero((info.state > 1) & np.asarray(g.vmask))[0]
+    for v in members[:50]:
+        sun_pos = coarse_pos[info.parent_coarse[v]]
+        assert np.linalg.norm(pos[v] - sun_pos) < 12.0
+
+
+def test_centralized_baseline_runs():
+    e, n = G.grid(8, 8)
+    pos, stats = multigila_layout(e, n, LayoutConfig(engine="centralized",
+                                                    seed=0))
+    assert cre(pos, e) < 0.05

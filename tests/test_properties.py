@@ -1,0 +1,87 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs.graph import build_graph, push_max
+from repro.core.solar_merger import run_merger, SUN
+from repro.parallel.collectives import quantize_int8, dequantize_int8
+from repro.launch.roofline import parse_module, analyze_text
+
+
+@st.composite
+def random_graph(draw, max_n=24):
+    n = draw(st.integers(4, max_n))
+    m = draw(st.integers(n - 1, min(3 * n, n * (n - 1) // 2)))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    e = rng.integers(0, n, size=(m, 2))
+    e = e[e[:, 0] != e[:, 1]]
+    e = np.unique(np.sort(e, axis=1), axis=0)
+    return e, n
+
+
+@given(random_graph())
+@settings(max_examples=25, deadline=None)
+def test_push_max_bounded_by_global_max(g):
+    edges, n = g
+    if len(edges) == 0:
+        return
+    pg = build_graph(edges, n)
+    vals = jnp.asarray(np.arange(pg.n_pad), jnp.int32)
+    out = np.asarray(push_max(pg, vals))
+    # received max never exceeds the global max id and is -1 ⟺ isolated
+    deg = np.asarray(pg.degrees())
+    assert (out[:n] <= n - 1).all()
+    assert ((out[:n] == -1) == (deg[:n] == 0)).all()
+
+
+@given(random_graph(max_n=20))
+@settings(max_examples=15, deadline=None)
+def test_merger_total_assignment_property(g):
+    edges, n = g
+    if len(edges) == 0:
+        return
+    pg = build_graph(edges, n)
+    stt = run_merger(pg, seed=0)
+    state = np.asarray(stt.state)
+    vm = np.asarray(pg.vmask)
+    deg = np.asarray(pg.degrees())
+    nonisolated = vm & (deg > 0)
+    # every non-isolated vertex is assigned; sun pointers are suns
+    assert (state[nonisolated] > 0).all()
+    sun = np.asarray(stt.sun)
+    assert (state[sun[nonisolated]] == SUN).all()
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1,
+                max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_quantize_roundtrip_error_bound(xs):
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    # symmetric per-tensor int8: error ≤ scale/2 everywhere
+    assert (err <= float(s) * 0.5 + 1e-5).all()
+
+
+@given(st.integers(1, 6), st.integers(8, 64), st.integers(8, 64))
+@settings(max_examples=10, deadline=None)
+def test_roofline_parser_dot_flops_exact(L, M, K):
+    """Parsed dot FLOPs scale exactly with loop trip count × 2MNK."""
+    M = (M // 8) * 8 or 8
+    K = (K // 8) * 8 or 8
+
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((M, K), jnp.float32),
+        jax.ShapeDtypeStruct((L, K, K), jnp.float32)).compile()
+    cost = analyze_text(comp.as_text(), world=1)
+    expect_dot = 2.0 * M * K * K * L
+    assert cost.flops >= expect_dot * 0.99
+    assert cost.flops <= expect_dot * 1.6 + 1e5  # + elementwise slack

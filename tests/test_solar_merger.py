@@ -1,0 +1,90 @@
+import numpy as np
+import pytest
+
+from repro.graphs import generators as G, build_graph
+from repro.graphs.metrics import bfs_distances
+from repro.core import run_merger, next_level, build_hierarchy, LayoutConfig
+from repro.core.solar_merger import SUN, PLANET, MOON
+
+
+GRAPHS = [
+    ("grid", *G.grid(16, 16)),
+    ("tree", *G.tree(4, 4)),
+    ("scale_free", *G.scale_free(1200, 3, 2)),
+    ("sierpinski", *G.sierpinski(5)),
+    ("flower", *G.flower(8, 8)),
+]
+
+
+@pytest.mark.parametrize("name,edges,n", GRAPHS, ids=[g[0] for g in GRAPHS])
+def test_merger_invariants(name, edges, n):
+    g = build_graph(edges, n)
+    st = run_merger(g, seed=1)
+    state = np.asarray(st.state)
+    sun = np.asarray(st.sun)
+    depth = np.asarray(st.depth)
+    parent = np.asarray(st.parent)
+    vm = np.asarray(g.vmask)
+
+    # every valid vertex assigned, depth ∈ {0,1,2} (system diameter ≤ 4)
+    assert (state[vm] > 0).all()
+    assert ((depth[vm] >= 0) & (depth[vm] <= 2)).all()
+    # sun pointers point at suns; suns point at themselves
+    assert (state[sun[vm]] == SUN).all()
+    suns = np.nonzero((state == SUN) & vm)[0]
+    assert (sun[suns] == suns).all()
+
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    em = np.asarray(g.emask)
+    adj = set(zip(src[em].tolist(), dst[em].tolist()))
+    # planets adjacent to their sun, moons adjacent to a same-system planet
+    for p in np.nonzero((state == PLANET) & vm)[0][:100]:
+        assert (int(sun[p]), int(p)) in adj
+    for mo in np.nonzero((state == MOON) & vm)[0][:100]:
+        par = int(parent[mo])
+        assert (par, int(mo)) in adj
+        assert state[par] == PLANET and sun[par] == sun[mo]
+
+
+def test_first_round_suns_are_3_apart():
+    """Before desperation kicks in, elected suns respect distance ≥ 3."""
+    e, n = G.grid(20, 20)
+    g = build_graph(e, n)
+    import jax, jax.numpy as jnp
+    from repro.core.solar_merger import init_state, sun_election
+    st = sun_election(g, init_state(g), jax.random.PRNGKey(0),
+                      jnp.asarray(0.5), jnp.asarray(False), jnp.asarray(True))
+    suns = np.nonzero(np.asarray(st.state) == SUN)[0]
+    suns = suns[suns < n]
+    D = bfs_distances(e, n, suns[:20])
+    for i in range(min(20, len(suns))):
+        d = D[i][suns]
+        d = d[d > 0]
+        assert (d >= 3).all()
+
+
+def test_next_level_mass_and_edges():
+    e, n = G.grid(16, 16)
+    g = build_graph(e, n)
+    st = run_merger(g, seed=0)
+    cg, info = next_level(g, st)
+    # total mass preserved
+    assert abs(float(np.asarray(cg.mass).sum()) - n) < 1e-3
+    # coarse graph strictly smaller, weights ≥ 1 (path lengths)
+    assert 0 < cg.n < n
+    w = np.asarray(cg.ewt)[np.asarray(cg.emask)]
+    assert (w >= 1.0).all()
+    # parent_coarse maps every valid vertex into [0, cg.n)
+    pc = info.parent_coarse[np.asarray(g.vmask)]
+    assert (pc >= 0).all() and (pc < cg.n).all()
+
+
+def test_hierarchy_shrinks():
+    e, n = G.delaunay(3000, 5)
+    graphs, infos = build_hierarchy(build_graph(e, n), LayoutConfig())
+    sizes = [gg.n for gg in graphs]
+    assert len(sizes) >= 2
+    assert all(sizes[i + 1] < sizes[i] for i in range(len(sizes) - 1))
+    # FM3-like shrink rate: at least 2× per level on meshes
+    assert sizes[1] <= sizes[0] / 2
