@@ -44,6 +44,52 @@ def force_kernels(small: bool = False):
     return rows
 
 
+def grid_vs_exact(small: bool = False):
+    """Tentpole acceptance numbers: wall-clock and max force error of the
+    three repulsion modes at scale. Target: grid ≥ 3× faster than exact
+    all-pairs at 50k vertices with error within 10% of the force scale."""
+    from repro.kernels.nbody.ref import nbody_repulsion_ref_chunked
+    from repro.kernels.grid_force.ops import grid_repulsion, choose_grid
+    from repro.kernels.neighbor_force.ref import neighbor_repulsion_ref
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in ((8_192,) if small else (8_192, 50_000)):
+        pos = jnp.asarray(rng.random((n, 2)) * np.sqrt(n), jnp.float32)
+        mass = jnp.ones((n,), jnp.float32)
+        vmask = jnp.ones((n,), bool)
+        G, cap = choose_grid(n)
+
+        exact = jax.jit(lambda p, m, v: nbody_repulsion_ref_chunked(
+            p, m, v, 1.0, 1.0, 1e-2))
+        grid = jax.jit(lambda p, m, v: grid_repulsion(
+            p, m, v, 1.0, 1.0, 1e-2, grid_dim=G, cell_cap=cap))
+        t_exact = _time(exact, pos, mass, vmask, iters=3)
+        t_grid = _time(grid, pos, mass, vmask, iters=3)
+
+        K = 64
+        nbr = jnp.asarray(rng.integers(0, n, (n, K)), jnp.int32)
+        nmask = jnp.ones((n, K), bool)
+        neigh = jax.jit(lambda p, m, i, k, v: neighbor_repulsion_ref(
+            p, m, i, k, v, 1.0, 1.0, 1e-2))
+        t_nbr = _time(neigh, pos, mass, nbr, nmask, vmask, iters=3)
+
+        f_e = np.asarray(exact(pos, mass, vmask))
+        f_g = np.asarray(grid(pos, mass, vmask))
+        en = np.linalg.norm(f_e, axis=1)
+        err = np.linalg.norm(f_g - f_e, axis=1) / (en + en.mean())
+        speedup = t_exact / t_grid
+        rows.append((f"repulsion_exact_n{n}", t_exact * 1e6, f"G={G}"))
+        rows.append((f"repulsion_grid_n{n}", t_grid * 1e6,
+                     f"speedup={speedup:.1f}x;maxerr={err.max():.4f}"))
+        rows.append((f"repulsion_neighbor_n{n}_k{K}", t_nbr * 1e6,
+                     "capped-khop"))
+        print(f"  repulsion n={n:6d}: exact {t_exact*1e3:9.1f} ms | "
+              f"grid {t_grid*1e3:9.1f} ms ({speedup:4.1f}x, max err "
+              f"{err.max()*100:.2f}%) | neighbor(k={K}) {t_nbr*1e3:9.1f} ms",
+              flush=True)
+    return rows
+
+
 def arch_steps(small: bool = True):
     from repro.configs import list_archs, get_smoke_config
     from repro.models import loss_fn, init_params
@@ -68,7 +114,7 @@ def arch_steps(small: bool = True):
 
 
 def run(small: bool = False):
-    return force_kernels(small) + arch_steps(small)
+    return force_kernels(small) + grid_vs_exact(small) + arch_steps(small)
 
 
 def csv_rows(rows):

@@ -38,8 +38,8 @@ def bsp_cost_model(ps=(4, 8, 16, 32)):
         import json, jax
         from repro.core.distributed import layout_train_step, layout_step_specs
         from repro.launch.roofline import analyze_text
-        mesh = jax.make_mesh(({p // 2}, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_compat_mesh
+        mesh = make_compat_mesh(({p // 2}, 2), ("data", "model"))
         n_pad, m_pad, cap = 1 << 18, 1 << 20, 32
         step, sh = layout_train_step(mesh, n_pad, m_pad, cap, mode="neighbor")
         specs = layout_step_specs(n_pad, m_pad, cap)

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from repro.utils.compat import shard_map
 
 
 def vtx_axes(mesh: Mesh) -> tuple[str, ...]:

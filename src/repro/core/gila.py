@@ -12,7 +12,14 @@ principle). Two TPU-native realizations of the repulsion:
                    every iteration because a Giraph vertex cannot store the
                    set; the set itself is topology-only, so we materialize
                    it once and gather positions per iteration — identical
-                   forces, strictly less communication).
+                   forces, strictly less communication);
+  * ``grid``     — grid-bucketed approximate repulsion (flat Barnes–Hut,
+                   kernels/grid_force): exact forces within the 3×3 cell
+                   neighborhood, per-cell aggregates beyond. Positions are
+                   rebinned every iteration inside the layout loop, so the
+                   spatial structure tracks the moving layout; used on fine
+                   levels where even capped neighbor lists are too coarse
+                   or too slow.
 
 The per-level schedule of k follows the paper exactly:
 k = 6 (m<1e3), 5 (m<5e3), 4 (m<1e4), 3 (m<1e5), 2 (m<1e6), 1 (m≥1e6).
@@ -128,6 +135,13 @@ def _repulsion_neighbors(pos, mass, nbr_idx, nbr_mask, vmask, C, L, min_dist):
                                      C, L, min_dist)
 
 
+def _repulsion_grid(pos, mass, vmask, C, L, min_dist, grid_dim, cell_cap):
+    """Grid-bucketed approximation (kernels/grid_force); rebins per call."""
+    from repro.kernels.grid_force import ops as grid_ops
+    return grid_ops.grid_repulsion(pos, mass, vmask, C, L, min_dist,
+                                   grid_dim=grid_dim, cell_cap=cell_cap)
+
+
 def _attraction(g: PaddedGraph, pos, L, min_dist):
     """FR attraction along edges with per-edge desired length ℓ_e = w_e·L:
     f_a(d) = d² / ℓ_e, directed toward the neighbor."""
@@ -144,13 +158,19 @@ def _attraction(g: PaddedGraph, pos, L, min_dist):
     return out[:n_pad]
 
 
-@partial(jax.jit, static_argnames=("mode",))
+@partial(jax.jit, static_argnames=("mode", "grid_dim", "cell_cap"))
 def gila_forces(g: PaddedGraph, pos, nbr_idx, nbr_mask, params_arr,
-                mode: str = "neighbor"):
-    """Total force per vertex; ``params_arr = [C, L, min_dist]`` (traced)."""
+                mode: str = "neighbor", grid_dim: int = 0, cell_cap: int = 0):
+    """Total force per vertex; ``params_arr = [C, L, min_dist]`` (traced).
+
+    ``grid_dim``/``cell_cap`` are the static grid parameters for
+    ``mode="grid"`` (pick them with ``kernels.grid_force.choose_grid``)."""
     C, L, min_dist = params_arr[0], params_arr[1], params_arr[2]
     if mode == "exact":
         rep = _repulsion_exact(pos, g.mass, g.vmask, C, L, min_dist)
+    elif mode == "grid":
+        rep = _repulsion_grid(pos, g.mass, g.vmask, C, L, min_dist,
+                              grid_dim, cell_cap)
     else:
         rep = _repulsion_neighbors(pos, g.mass, nbr_idx, nbr_mask, g.vmask,
                                    C, L, min_dist)
@@ -158,16 +178,21 @@ def gila_forces(g: PaddedGraph, pos, nbr_idx, nbr_mask, params_arr,
     return rep + att
 
 
-@partial(jax.jit, static_argnames=("mode", "iters"))
+@partial(jax.jit, static_argnames=("mode", "iters", "grid_dim", "cell_cap"))
 def gila_layout(g: PaddedGraph, pos0, nbr_idx, nbr_mask, *, mode: str,
                 iters: int, temp0: float, temp_decay: float,
-                ideal_len: float, rep_const: float, min_dist: float = 1e-3):
-    """Run ``iters`` force iterations with a cooling displacement clamp."""
+                ideal_len: float, rep_const: float, min_dist: float = 1e-3,
+                grid_dim: int = 0, cell_cap: int = 0):
+    """Run ``iters`` force iterations with a cooling displacement clamp.
+
+    In ``mode="grid"`` the spatial binning happens inside ``gila_forces``,
+    i.e. vertices are rebinned on every iteration of the loop."""
     params_arr = jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32)
 
     def body(i, carry):
         pos, temp = carry
-        f = gila_forces(g, pos, nbr_idx, nbr_mask, params_arr, mode=mode)
+        f = gila_forces(g, pos, nbr_idx, nbr_mask, params_arr, mode=mode,
+                        grid_dim=grid_dim, cell_cap=cell_cap)
         norm = jnp.sqrt(jnp.sum(f * f, axis=1) + 1e-12)
         step = jnp.minimum(norm, temp)
         pos = pos + f / norm[:, None] * step[:, None]

@@ -33,6 +33,7 @@ class LayoutConfig:
     min_shrink: float = 0.96         # stop if a level shrinks less than this
     p_sun: float = 0.35
     exact_threshold: int = 2048      # exact N-body below this size
+    grid_threshold: int = 32768      # grid-approx repulsion above this size
     coarsest_iters: int = 300
     finest_iters: int = 50
     ideal_len: float = 1.0
@@ -93,12 +94,15 @@ def _layout_one_level(g: PaddedGraph, pos0, sched: LevelSchedule,
         nbr_idx, nbr_mask = gila.build_level_neighbors(g, sched.k, sched.cap,
                                                        seed=seed)
     else:
+        # exact and grid modes need no neighbor lists (grid rebins inside
+        # the iteration loop)
         nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
         nbr_mask = jnp.zeros((g.n_pad, 1), bool)
     return gila.gila_layout(
         g, pos0, nbr_idx, nbr_mask, mode=sched.mode, iters=sched.iters,
         temp0=sched.temp0, temp_decay=sched.temp_decay,
-        ideal_len=cfg.ideal_len, rep_const=cfg.rep_const)
+        ideal_len=cfg.ideal_len, rep_const=cfg.rep_const,
+        grid_dim=sched.grid_dim, cell_cap=sched.cell_cap)
 
 
 def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig
@@ -125,6 +129,7 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig
     if cfg.engine == "flat":
         sched = make_schedule(0, 1, g0.n, g0.m,
                               exact_threshold=cfg.exact_threshold,
+                              grid_threshold=cfg.grid_threshold,
                               coarsest_iters=cfg.coarsest_iters,
                               ideal_len=cfg.ideal_len)
         pos = gila.random_init(g0, cfg.ideal_len * max(g0.n, 4) ** 0.5,
@@ -144,6 +149,7 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig
     # coarsest level: random init + layout
     gk = graphs[-1]
     sched = make_schedule(L - 1, L, gk.n, gk.m, exact_threshold=exact_thr,
+                          grid_threshold=cfg.grid_threshold,
                           coarsest_iters=cfg.coarsest_iters,
                           finest_iters=cfg.finest_iters,
                           ideal_len=cfg.ideal_len)
@@ -156,6 +162,7 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig
         pos = solar_placer(gi, infos[i], pos, seed=cfg.seed + i,
                            scatter_scale=0.5 * cfg.ideal_len)
         sched = make_schedule(i, L, gi.n, gi.m, exact_threshold=exact_thr,
+                              grid_threshold=cfg.grid_threshold,
                               coarsest_iters=cfg.coarsest_iters,
                               finest_iters=cfg.finest_iters,
                               ideal_len=cfg.ideal_len)

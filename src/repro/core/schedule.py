@@ -3,6 +3,14 @@
 The paper tunes k (repulsion horizon) by edge count, and the remaining
 parameters so that coarse levels get more quality (more iterations, hotter
 start) and fine levels get speed (good init ⇒ few iterations suffice).
+
+Repulsion-mode selection by level size:
+  n ≤ exact_threshold   →  "exact"     tiled all-pairs (coarse levels)
+  n ≤ grid_threshold    →  "neighbor"  capped k-hop lists (mid levels)
+  n > grid_threshold    →  "grid"      grid-bucketed approximation (fine
+                                       levels of big hierarchies, where
+                                       k-hop caps degrade quality and the
+                                       host-side list build dominates)
 """
 from __future__ import annotations
 
@@ -18,11 +26,14 @@ class LevelSchedule:
     iters: int
     temp0: float
     temp_decay: float
-    mode: str            # "exact" | "neighbor"
+    mode: str            # "exact" | "neighbor" | "grid"
+    grid_dim: int = 0    # G (grid mode only): G×G spatial cells
+    cell_cap: int = 0    # bucket capacity per cell (grid mode only)
 
 
 def make_schedule(level: int, n_levels: int, n: int, m: int,
                   *, exact_threshold: int = 2048,
+                  grid_threshold: int = 32768,
                   coarsest_iters: int = 300, finest_iters: int = 50,
                   ideal_len: float = 1.0) -> LevelSchedule:
     """level = 0 is the input graph; level = n_levels-1 is the coarsest."""
@@ -37,7 +48,17 @@ def make_schedule(level: int, n_levels: int, n: int, m: int,
     # hotter start on coarse levels (layout from scratch), gentle on fine
     extent = ideal_len * max(n, 4) ** 0.5
     temp0 = extent * (0.25 if level == n_levels - 1 else 0.06)
-    mode = "exact" if n <= exact_threshold else "neighbor"
+    grid_dim = cell_cap = 0
+    if n <= exact_threshold:
+        mode = "exact"
+    elif n <= grid_threshold:
+        mode = "neighbor"
+    else:
+        mode = "grid"
+        # deferred import: keeps the Pallas kernel stack off the module
+        # import path for consumers that never select grid mode
+        from repro.kernels.grid_force import choose_grid
+        grid_dim, cell_cap = choose_grid(n)
     return LevelSchedule(k=k, cap=cap, iters=max(iters, 10), temp0=temp0,
                          temp_decay=0.985 if level == n_levels - 1 else 0.96,
-                         mode=mode)
+                         mode=mode, grid_dim=grid_dim, cell_cap=cell_cap)

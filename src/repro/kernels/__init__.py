@@ -2,6 +2,8 @@
 #   nbody/          — tiled all-pairs Fruchterman-Reingold repulsion
 #                     (the single-level layout hot spot, paper §3.4)
 #   neighbor_force/ — k-hop neighbor-list force accumulation (GiLA locality)
+#   grid_force/     — grid-bucketed approximate repulsion (flat Barnes–Hut:
+#                     exact 3×3 near field + per-cell aggregate far field)
 #   flash_attention/— blocked causal attention for the LM architecture zoo
 # Each subpackage: kernel.py (pl.pallas_call + explicit BlockSpec VMEM
 # tiling), ops.py (jit'd wrapper with platform dispatch), ref.py (pure-jnp

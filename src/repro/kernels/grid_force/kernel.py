@@ -1,0 +1,110 @@
+"""Grid-bucketed FR repulsion — Pallas TPU kernels.
+
+Two kernels back the grid (flat Barnes–Hut) mode:
+
+  * ``grid_near_pallas`` — exact near field. One program per block of
+    cells; each cell's bucket ([cap] resident vertices, gathered by XLA
+    into a dense [n_cells, cap, 2] tile) interacts with the concatenated
+    buckets of its 3×3 cell neighborhood ([n_cells, 9·cap, 3] as
+    (x, y, weight); missing/padded slots carry weight 0 so they contribute
+    nothing). Self-pairs have delta = 0 and therefore zero force, exactly
+    as in the all-pairs kernel.
+
+  * ``grid_far_pallas`` — two-set tiled n-body: every vertex against every
+    cell aggregate (mass at centroid). Identical tiling to kernels/nbody
+    but with independent row (vertices) and column (cells) sets; columns
+    are the reduction dimension, rows the parallel one.
+
+VMEM per near program (f32): Bc·cap·2 + Bc·9cap·3 + Bc·cap·9cap·4 temps
+≈ 16·Bc·cap²·9 B; cap = 64, Bc = 1 → ~0.6 MB, comfortably inside a core's
+VMEM, so Bc up to 8 is safe for the default caps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _near_kernel(rows_ref, cols_ref, params_ref, out_ref):
+    C, L, md = params_ref[0], params_ref[1], params_ref[2]
+    rows = rows_ref[...]                  # [Bc, cap, 2]
+    cols = cols_ref[...]                  # [Bc, 9·cap, 3] — (x, y, w)
+    dx = rows[:, :, 0][:, :, None] - cols[:, None, :, 0]
+    dy = rows[:, :, 1][:, :, None] - cols[:, None, :, 1]
+    d2 = dx * dx + dy * dy + md * md
+    inv = (C * L * L) * cols[:, None, :, 2] / d2
+    fx = jnp.sum(dx * inv, axis=2)
+    fy = jnp.sum(dy * inv, axis=2)
+    out_ref[...] = jnp.stack([fx, fy], axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_cells", "interpret"))
+def grid_near_pallas(rows_pos, nbr_pos, nbr_w, C, L, min_dist, *,
+                     block_cells: int = 1, interpret: bool = False):
+    """rows_pos f32[nc, cap, 2]; nbr_pos f32[nc, 9·cap, 2];
+    nbr_w f32[nc, 9·cap] (0 = masked) → forces f32[nc, cap, 2]."""
+    nc, cap, _ = rows_pos.shape
+    K = nbr_w.shape[1]
+    assert nc % block_cells == 0, (nc, block_cells)
+    cols = jnp.concatenate([nbr_pos.astype(jnp.float32),
+                            nbr_w.astype(jnp.float32)[..., None]], axis=2)
+    params = jnp.asarray([C, L, min_dist], jnp.float32)
+    return pl.pallas_call(
+        _near_kernel,
+        grid=(nc // block_cells,),
+        in_specs=[
+            pl.BlockSpec((block_cells, cap, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_cells, K, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_cells, cap, 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, cap, 2), jnp.float32),
+        interpret=interpret,
+    )(rows_pos.astype(jnp.float32), cols, params)
+
+
+def _far_kernel(rows_ref, cols_ref, params_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    C, L, md = params_ref[0], params_ref[1], params_ref[2]
+    rows = rows_ref[...]                  # [BR, 2]
+    cols = cols_ref[...]                  # [BC, 3]
+    dx = rows[:, 0][:, None] - cols[:, 0][None, :]
+    dy = rows[:, 1][:, None] - cols[:, 1][None, :]
+    d2 = dx * dx + dy * dy + md * md
+    inv = (C * L * L) * cols[:, 2][None, :] / d2
+    out_ref[...] += jnp.stack([jnp.sum(dx * inv, axis=1),
+                               jnp.sum(dy * inv, axis=1)], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols",
+                                             "interpret"))
+def grid_far_pallas(pos, cell_xyw, C, L, min_dist, *,
+                    block_rows: int = 256, block_cols: int = 256,
+                    interpret: bool = False):
+    """pos f32[n, 2] vertices; cell_xyw f32[nc, 3] cell (x, y, mass)
+    aggregates → aggregate-field forces f32[n, 2]."""
+    n = pos.shape[0]
+    nc = cell_xyw.shape[0]
+    assert n % block_rows == 0 and nc % block_cols == 0, \
+        (n, nc, block_rows, block_cols)
+    params = jnp.asarray([C, L, min_dist], jnp.float32)
+    return pl.pallas_call(
+        _far_kernel,
+        grid=(n // block_rows, nc // block_cols),
+        in_specs=[
+            pl.BlockSpec((block_rows, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_cols, 3), lambda i, j: (j, 0)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 2), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 2), jnp.float32),
+        interpret=interpret,
+    )(pos.astype(jnp.float32), cell_xyw.astype(jnp.float32), params)

@@ -1,0 +1,246 @@
+"""Grid-bucketed approximate repulsion — binning, composition, dispatch.
+
+``grid_repulsion`` is the op the layout engine calls (mode="grid" in
+core/gila.py). Everything here is jit-compatible with static
+``grid_dim``/``cell_cap``, so the whole op — including the per-iteration
+rebinning — lives inside ``gila_layout``'s fori_loop.
+
+Pipeline per call (positions move every iteration, so all of it reruns):
+
+  1. *Bin*: bounding box of the valid vertices → uniform ``G×G`` grid;
+     each vertex gets a cell id. A stable argsort + searchsorted assigns a
+     within-cell rank; vertices with rank < ``cell_cap`` land in a dense
+     bucket table [G²+1, cap] (sentinel row/slots = n). Overflow vertices
+     keep repelling through the aggregate terms (see 3).
+  2. *Near field* (exact): every bucketed vertex vs the buckets of its
+     3×3 cell neighborhood — the Pallas kernel in kernel.py (jnp oracle in
+     ref.py elsewhere).
+  3. *Far field* (approximate): every vertex vs per-cell aggregates
+     (total mass at centroid) of ALL cells, minus the same aggregate field
+     of its 9 near cells (those were counted exactly), plus the
+     aggregate field of near-cell *overflow* vertices (those were NOT in
+     the buckets), Plummer-softened by the overflow set's RMS radius — a
+     point stand-in for a spread-out set misbehaves at near range.
+     Overflow vertices themselves additionally receive the softened
+     in-bucket aggregates of their 9 near cells (they have no bucket row,
+     so the exact kernel never sees them). With no overflow this is the
+     textbook flat Barnes–Hut with opening radius one cell; with overflow
+     it degrades gracefully instead of dropping mass.
+
+Approximation error: far cells are ≥ 1 cell width away, so the opening
+angle is ≤ 1 and the centroid approximation of the 1/d force field is
+accurate to a few percent; tests/test_grid_force.py bounds it end-to-end
+against the all-pairs oracle on random and clustered inputs.
+
+Set ``REPRO_PALLAS=interpret|ref|pallas`` to force a backend (same
+convention as the other kernel subsystems).
+"""
+from __future__ import annotations
+
+import math
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grid_force.kernel import grid_near_pallas, grid_far_pallas
+from repro.kernels.grid_force.ref import grid_near_ref, grid_far_ref
+
+_EPS = 1e-12
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env in ("interpret", "ref", "pallas"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def choose_grid(n: int, *, avg_occupancy: int = 12) -> tuple[int, int]:
+    """Static (grid_dim, cell_cap) for an n-vertex level.
+
+    grid_dim targets ``avg_occupancy`` vertices per cell; cell_cap covers
+    the mean plus ~6σ of a Poisson cell load (overflow beyond the cap is
+    handled by the aggregate terms, so the cap bounds *work*, not
+    correctness).
+    """
+    n = max(int(n), 1)
+    G = int(round(math.sqrt(n / avg_occupancy)))
+    G = max(2, min(G, 128))
+    avg = n / (G * G)
+    cap = int(math.ceil(avg + 6.0 * math.sqrt(avg) + 8.0))
+    cap = min(max(8, (cap + 7) // 8 * 8), n)
+    return G, max(cap, 1)
+
+
+def _neighbor_table(G: int) -> np.ndarray:
+    """[G²+1, 9] cell ids of each cell's 3×3 neighborhood (incl. itself);
+    out-of-range neighbors and the sentinel row point at cell G²."""
+    nc = G * G
+    cells = np.arange(nc)
+    cx, cy = cells % G, cells // G
+    cols = []
+    for oy in (-1, 0, 1):
+        for ox in (-1, 0, 1):
+            nx, ny = cx + ox, cy + oy
+            ok = (0 <= nx) & (nx < G) & (0 <= ny) & (ny < G)
+            cols.append(np.where(ok, ny * G + nx, nc))
+    table = np.stack(cols, axis=1).astype(np.int32)
+    return np.concatenate([table, np.full((1, 9), nc, np.int32)], axis=0)
+
+
+def bin_vertices(pos, vmask, grid_dim: int, cell_cap: int):
+    """Bucket vertices into a G×G grid over their bounding box.
+
+    Returns (cid[n] int32 with sentinel G², bucket[G²+1, cap] int32 with
+    sentinel n, inb[n] bool — vertex made it into its cell's bucket).
+    """
+    n = pos.shape[0]
+    G, cap = grid_dim, cell_cap
+    nc = G * G
+    big = jnp.float32(3e38)
+    lo = jnp.min(jnp.where(vmask[:, None], pos, big), axis=0)
+    hi = jnp.max(jnp.where(vmask[:, None], pos, -big), axis=0)
+    cell = jnp.maximum(hi - lo, 1e-6) / G
+    ij = jnp.clip(jnp.floor((pos - lo) / cell), 0, G - 1).astype(jnp.int32)
+    cid = jnp.where(vmask, ij[:, 1] * G + ij[:, 0], nc).astype(jnp.int32)
+
+    order = jnp.argsort(cid)                       # stable in JAX
+    sc = cid[order]
+    rank = jnp.arange(n) - jnp.searchsorted(sc, sc, side="left")
+    ok = (rank < cap) & (sc < nc)
+    bucket = jnp.full((nc + 1, cap), n, jnp.int32)
+    bucket = bucket.at[jnp.where(ok, sc, nc),
+                       jnp.where(ok, rank, 0)].set(
+        jnp.where(ok, order.astype(jnp.int32), n))
+    inb = jnp.zeros((n,), bool).at[order].set(ok)
+    return cid, bucket, inb
+
+
+def _cell_aggregates(pos, w, cid, nc: int):
+    """(mass[nc+1], weighted-sum[nc+1, 2], centroid[nc+1, 2]) per cell
+    (sentinel row is empty)."""
+    M = jax.ops.segment_sum(w, cid, num_segments=nc + 1)
+    S = jax.ops.segment_sum(w[:, None] * pos, cid, num_segments=nc + 1)
+    return M, S, S / jnp.maximum(M, _EPS)[:, None]
+
+
+def _agg_field_9(pos, mu9, m9, C, L, md, r9=None):
+    """Aggregate force field of each vertex's 9 gathered cells:
+    pos [n, 2], mu9 [n, 9, 2], m9 [n, 9] → [n, 2]. ``r9`` optionally
+    Plummer-softens each aggregate by its RMS radius (a point mass cannot
+    faithfully stand in for a spread-out set at near range — softening by
+    the set's extent bounds the spurious 1/d² spike)."""
+    dx = pos[:, 0][:, None] - mu9[..., 0]
+    dy = pos[:, 1][:, None] - mu9[..., 1]
+    d2 = dx * dx + dy * dy + md * md
+    if r9 is not None:
+        d2 = d2 + r9 * r9
+    inv = (C * L * L) * m9 / d2
+    return jnp.stack([jnp.sum(dx * inv, axis=1),
+                      jnp.sum(dy * inv, axis=1)], axis=1)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _far_all_cells(pos, cell_xyw, C, L, md, mode: str):
+    """Aggregate field of ALL cells on every vertex (backend-dispatched)."""
+    n, nc = pos.shape[0], cell_xyw.shape[0]
+    if mode == "ref":
+        chunk = 512
+        npad = _round_up(n, chunk)
+        pp = jnp.pad(pos, ((0, npad - n), (0, 0)))
+        out = jax.lax.map(
+            lambda blk: grid_far_ref(blk, cell_xyw, C, L, md),
+            pp.reshape(npad // chunk, chunk, 2))
+        return out.reshape(npad, 2)[:n]
+    npad, ncpad = _round_up(n, 128), _round_up(nc, 128)
+    pp = jnp.pad(pos, ((0, npad - n), (0, 0)))
+    cp = jnp.pad(cell_xyw, ((0, ncpad - nc), (0, 0)))   # padded cells: w = 0
+    out = grid_far_pallas(pp, cp, C, L, md, block_rows=128, block_cols=128,
+                          interpret=(mode == "interpret"))
+    return out[:n]
+
+
+def grid_repulsion(pos, mass, vmask, C, L, min_dist, *,
+                   grid_dim: int, cell_cap: int):
+    """Grid-approximated FR repulsion: pos f32[n, 2] → forces f32[n, 2].
+
+    Static ``grid_dim``/``cell_cap`` (pick with ``choose_grid``); all array
+    work is traced, so the op rebins on every call.
+    """
+    assert grid_dim >= 2 and cell_cap >= 1, (grid_dim, cell_cap)
+    mode = _mode()
+    n = pos.shape[0]
+    G, cap = grid_dim, cell_cap
+    nc = G * G
+    pos = pos.astype(jnp.float32)
+    w = jnp.where(vmask, mass, 0.0).astype(jnp.float32)
+
+    cid, bucket, inb = bin_vertices(pos, vmask, G, cap)
+    M_full, S_full, mu_full = _cell_aggregates(pos, w, cid, nc)
+    w_out = jnp.where(inb, 0.0, w)
+    M_out, S_out, mu_out = _cell_aggregates(pos, w_out, cid, nc)
+    # per-cell second moments → RMS radii (for near-range softening)
+    Q_full = jax.ops.segment_sum(w * jnp.sum(pos * pos, axis=1), cid,
+                                 num_segments=nc + 1)
+    Q_out = jax.ops.segment_sum(w_out * jnp.sum(pos * pos, axis=1), cid,
+                                num_segments=nc + 1)
+
+    def _rms(Q, M, mu):
+        return jnp.sqrt(jnp.maximum(
+            Q / jnp.maximum(M, _EPS) - jnp.sum(mu * mu, axis=1), 0.0))
+
+    r_out = _rms(Q_out, M_out, mu_out)
+    # in-bucket complements (overflow vertices see these as aggregates)
+    M_in = M_full - M_out
+    S_in = S_full - S_out
+    mu_in = S_in / jnp.maximum(M_in, _EPS)[:, None]
+    r_in = _rms(Q_full - Q_out, M_in, mu_in)
+
+    # -- near field: exact within the 3×3 neighborhood ------------------------
+    table = jnp.asarray(_neighbor_table(G))                 # [nc+1, 9]
+    pos_p = jnp.concatenate([pos, jnp.zeros((1, 2), jnp.float32)], axis=0)
+    w_p = jnp.concatenate([w, jnp.zeros((1,), jnp.float32)], axis=0)
+    rows_idx = bucket[:nc]                                  # [nc, cap]
+    rows_pos = pos_p[rows_idx]
+    nbr_bucket = bucket[table[:nc]].reshape(nc, 9 * cap)
+    nbr_pos = pos_p[nbr_bucket]
+    nbr_w = w_p[nbr_bucket]
+    if mode == "ref":
+        near = grid_near_ref(rows_pos, nbr_pos, nbr_w, C, L, min_dist)
+    else:
+        near = grid_near_pallas(rows_pos, nbr_pos, nbr_w, C, L, min_dist,
+                                interpret=(mode == "interpret"))
+    f_near = jnp.zeros((n + 1, 2), jnp.float32).at[
+        rows_idx.reshape(-1)].set(near.reshape(-1, 2))[:n]
+
+    # -- far field: all-cell aggregates, near cells swapped for overflow ------
+    cell_xyw = jnp.concatenate([mu_full[:nc], M_full[:nc, None]], axis=1)
+    f_far = _far_all_cells(pos, cell_xyw, C, L, min_dist, mode)
+    near9 = table[cid]                                      # [n, 9]
+    f_far -= _agg_field_9(pos, mu_full[near9], M_full[near9], C, L, min_dist)
+    # overflow add-back: an overflowed vertex sits inside its own cell's
+    # overflow aggregate, which would exert a spurious self-force — remove
+    # its own (mass, position) from the center cell (table column 4) before
+    # evaluating.
+    m9 = M_out[near9]
+    mu9 = mu_out[near9]
+    m_self = w_out                                          # w if overflowed
+    m_adj = jnp.maximum(M_out[cid] - m_self, 0.0)
+    s_adj = S_out[cid] - m_self[:, None] * pos
+    m9 = m9.at[:, 4].set(m_adj)
+    mu9 = mu9.at[:, 4].set(s_adj / jnp.maximum(m_adj, _EPS)[:, None])
+    f_far += _agg_field_9(pos, mu9, m9, C, L, min_dist, r9=r_out[near9])
+    # an overflowed vertex also never met the *bucketed* vertices of its
+    # 3×3 neighborhood (it has no bucket row of its own) — restore them as
+    # softened in-bucket aggregates, gated to overflow vertices only
+    f_bkt = _agg_field_9(pos, mu_in[near9], M_in[near9], C, L, min_dist,
+                         r9=r_in[near9])
+    f_far += jnp.where(inb, 0.0, 1.0)[:, None] * f_bkt
+
+    return jnp.where(vmask[:, None], f_near + f_far, 0.0)

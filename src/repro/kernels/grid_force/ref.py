@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the grid-force kernels.
+
+``grid_near_ref`` / ``grid_far_ref`` mirror kernel.py's near/far kernels
+operation-for-operation on the SAME pre-gathered inputs, so the Pallas
+kernels must match them to float tolerance (asserted in
+tests/test_grid_force.py). The end-to-end approximation quality of the
+composed op (binning + near + far) is bounded against the all-pairs
+oracle separately.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def grid_near_ref(rows_pos, nbr_pos, nbr_w, C, L, min_dist):
+    """rows_pos [nc, cap, 2]; nbr_pos [nc, K, 2]; nbr_w [nc, K] →
+    [nc, cap, 2] near-field forces (masked slots have weight 0)."""
+    dx = rows_pos[:, :, 0][:, :, None] - nbr_pos[:, :, 0][:, None, :]
+    dy = rows_pos[:, :, 1][:, :, None] - nbr_pos[:, :, 1][:, None, :]
+    d2 = dx * dx + dy * dy + min_dist ** 2
+    inv = (C * L * L) * nbr_w[:, None, :] / d2
+    return jnp.stack([jnp.sum(dx * inv, axis=2),
+                      jnp.sum(dy * inv, axis=2)], axis=2)
+
+
+def grid_far_ref(pos, cell_xyw, C, L, min_dist):
+    """pos [n, 2] vs cell aggregates [nc, 3] (x, y, mass) → [n, 2]."""
+    dx = pos[:, 0][:, None] - cell_xyw[:, 0][None, :]
+    dy = pos[:, 1][:, None] - cell_xyw[:, 1][None, :]
+    d2 = dx * dx + dy * dy + min_dist ** 2
+    inv = (C * L * L) * cell_xyw[:, 2][None, :] / d2
+    return jnp.stack([jnp.sum(dx * inv, axis=1),
+                      jnp.sum(dy * inv, axis=1)], axis=1)

@@ -6,6 +6,7 @@ repels like M unit vertices, keeping levels consistent).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -16,3 +17,24 @@ def nbody_repulsion_ref(pos, mass, vmask, C, L, min_dist):
     inv = (C * L * L) * w[None, :] / d2                  # [n, n]
     f = jnp.sum(delta * inv[:, :, None], axis=1)         # [n, 2]
     return jnp.where(vmask[:, None], f, 0.0)
+
+
+def nbody_repulsion_ref_chunked(pos, mass, vmask, C, L, min_dist,
+                                chunk: int = 1024):
+    """Same oracle, row-chunked with lax.map so peak memory is
+    O(chunk · n) instead of O(n²) — usable at 50k+ vertices."""
+    n = pos.shape[0]
+    npad = (n + chunk - 1) // chunk * chunk
+    pp = jnp.pad(pos.astype(jnp.float32), ((0, npad - n), (0, 0)))
+    w = jnp.where(vmask, mass, 0.0).astype(jnp.float32)
+
+    def block(rows):                                     # [chunk, 2]
+        dx = rows[:, 0][:, None] - pos[:, 0][None, :]
+        dy = rows[:, 1][:, None] - pos[:, 1][None, :]
+        d2 = dx * dx + dy * dy + min_dist ** 2
+        inv = (C * L * L) * w[None, :] / d2
+        return jnp.stack([jnp.sum(dx * inv, axis=1),
+                          jnp.sum(dy * inv, axis=1)], axis=1)
+
+    f = jax.lax.map(block, pp.reshape(npad // chunk, chunk, 2))
+    return jnp.where(vmask[:, None], f.reshape(npad, 2)[:n], 0.0)

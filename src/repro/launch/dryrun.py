@@ -249,7 +249,7 @@ def analyze(compiled, cfg, cell, mesh, compile_s, opts):
     n_dev = int(mesh.devices.size)
     mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = RL.normalize_cost_analysis(compiled.cost_analysis())
     text = compiled.as_text()
     cost = RL.analyze_text(text, world=n_dev)
     mf = model_flops_per_device(cfg, cell, n_dev)

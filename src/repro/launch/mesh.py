@@ -6,22 +6,39 @@ importing jax and then calls this.
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
+
+
+def make_compat_mesh(shape, axes):
+    """Version-portable mesh constructor.
+
+    `jax.sharding.AxisType` and `jax.make_mesh(axis_types=...)` only exist on
+    newer JAX; on 0.4.x every mesh axis is implicitly Auto, so plain
+    `jax.make_mesh` (or `Mesh` on even older versions) is equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    devices = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_compat_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Mesh over whatever devices exist (CPU tests / local runs)."""
     n = jax.device_count()
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_compat_mesh((n // model, model), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline (per chip)

@@ -51,6 +51,19 @@ _INSTR_RE = re.compile(r"^\s+(ROOT\s+)?%([\w.\-]+)\s+=\s+(.*)$")
 _COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->")
 
 
+def normalize_cost_analysis(ca) -> dict:
+    """`Compiled.cost_analysis()` → flat dict, across JAX versions.
+
+    JAX 0.4.x returns a one-element list of per-device dicts; newer JAX
+    returns the dict directly; some backends return None.
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def _parse_shape(type_str):
     """'f32[64,128]{1,0}' → (dtype, shape) | None for tuples/tokens."""
     m = _SHAPE_RE.match(type_str)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.parallel.sharding import shard, current_rules
+from repro.utils.compat import shard_map
 from repro.models.layers import _normal
 
 
@@ -132,7 +133,7 @@ def apply_moe_shardmap(p, x, m, activation: str = "swiglu"):
         return jax.lax.psum(y_part, "model"), aux
 
     batch_axes = r.batch
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local, mesh=mesh,
         in_specs=(P(batch_axes, None, None), P(None, None),
                   P("model", None, None), P("model", None, None),
@@ -247,7 +248,7 @@ def apply_moe_a2a(p, x, m, activation: str = "swiglu"):
         return jnp.einsum("bskd,bsk->bsd", got, w), aux
 
     batch_axes = r.batch        # includes "model" under fsdp_dp
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local, mesh=mesh,
         in_specs=(P(batch_axes, None, None), P(None, None),
                   P("model", None, None), P("model", None, None),

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.utils.compat import shard_map, pvary
+
 
 def pipeline_scan(mesh: Mesh, stage_fn, n_microbatches: int):
     """Build pp(x_mb, stage_params) → y_mb.
@@ -38,8 +40,11 @@ def pipeline_scan(mesh: Mesh, stage_fn, n_microbatches: int):
     M = n_microbatches
     fwd_perm = [(s, s + 1) for s in range(S_stages - 1)]
 
-    def pp(x_mb, params_local):
-        stage = jax.lax.axis_index("pod")
+    def pp(x_mb, params_local, stage_arr):
+        # stage id arrives as a P("pod")-sharded iota instead of
+        # lax.axis_index: inside a partial-manual region the latter lowers
+        # to a partition-id HLO that 0.4.x GSPMD refuses to partition.
+        stage = stage_arr[0]
         mb_shape = x_mb.shape[1:]
 
         def tick(prev_out, t):
@@ -52,7 +57,7 @@ def pipeline_scan(mesh: Mesh, stage_fn, n_microbatches: int):
             y = stage_fn(params_local, x_in)
             return y, y                         # stack every tick's output
 
-        y0 = jax.lax.pvary(jnp.zeros(mb_shape, x_mb.dtype), ("pod",))
+        y0 = pvary(jnp.zeros(mb_shape, x_mb.dtype), ("pod",))
         _, ys_all = jax.lax.scan(tick, y0, jnp.arange(M + S_stages - 1))
         # microbatch m finishes on the LAST stage at tick m + S − 1:
         # a STATIC slice of the stacked outputs (bubble ticks fall outside)
@@ -60,10 +65,12 @@ def pipeline_scan(mesh: Mesh, stage_fn, n_microbatches: int):
         mask = (stage == S_stages - 1).astype(x_mb.dtype)
         return jax.lax.psum(out * mask, "pod")
 
-    return jax.shard_map(pp, mesh=mesh,
-                         in_specs=(P(), P("pod")),
-                         out_specs=P(),
-                         axis_names={"pod"}, check_vma=False)
+    sm = shard_map(pp, mesh=mesh,
+                   in_specs=(P(), P("pod"), P("pod")),
+                   out_specs=P(),
+                   axis_names={"pod"}, check_vma=False)
+    return lambda x_mb, params_local: sm(
+        x_mb, params_local, jnp.arange(S_stages, dtype=jnp.int32))
 
 
 def pipeline_forward(params, cfg, batch, mesh: Mesh, *,

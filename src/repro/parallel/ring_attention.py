@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.utils.compat import shard_map, pvary
+
 
 def ring_attention(mesh: Mesh, *, axis: str = "model", causal: bool = True,
                    batch_axes=("data",)):
@@ -63,7 +65,7 @@ def ring_attention(mesh: Mesh, *, axis: str = "model", causal: bool = True,
         m0 = jnp.full((B, KV, G, Sq), -jnp.inf, jnp.float32)
         l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
         a0 = jnp.zeros((B, KV, G, Sq, hd), v.dtype)
-        m0, l0, a0 = (jax.lax.pvary(x, (axis,)) for x in (m0, l0, a0))
+        m0, l0, a0 = (pvary(x, (axis,)) for x in (m0, l0, a0))
         (m, l, acc, _, _), _ = jax.lax.scan(
             step, (m0, l0, a0, k, v), jnp.arange(size))
         out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
@@ -71,5 +73,5 @@ def ring_attention(mesh: Mesh, *, axis: str = "model", causal: bool = True,
 
     ba = tuple(a for a in batch_axes if a in mesh.axis_names)
     spec = P(ba if ba else None, axis, None, None)
-    return jax.shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+    return shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
                          out_specs=spec, check_vma=False)

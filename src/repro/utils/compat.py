@@ -1,0 +1,42 @@
+"""JAX version-portability shims.
+
+The codebase targets current JAX (public ``jax.shard_map`` with vma
+tracking, ``jax.lax.pvary``, ``jax.sharding.AxisType``) but must also run
+on the 0.4.x line installed in CI containers, where shard_map still lives
+in ``jax.experimental`` with the older ``check_rep``/``auto`` surface and
+pvary does not exist (replication is untracked, so it is the identity).
+
+Mesh construction has its own shim (`repro.launch.mesh.make_compat_mesh`);
+everything else version-dependent funnels through here.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+                  axis_names=None):
+        kw = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+
+    pvary = jax.lax.pvary
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+                  axis_names=None):
+        # axis_names (partial-manual) would map onto 0.4.x's `auto`
+        # complement, but the 0.4.x SPMD partitioner hard-crashes on manual
+        # subgroups ("Check failed: IsManualSubgroup"), so we run fully
+        # manual instead: axes absent from the specs are replicated in the
+        # region — numerically identical, forgoing only in-region GSPMD.
+        del axis_names
+        return _shard_map_04(f, mesh, in_specs, out_specs,
+                             check_rep=check_vma)
+
+    def pvary(x, axis_names):
+        del axis_names  # 0.4.x does not track varying-ness
+        return x

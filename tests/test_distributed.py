@@ -16,7 +16,10 @@ def run_sub(code: str, extra_env: dict | None = None) -> str:
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env.update(extra_env or {})
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+    # every snippet builds meshes through the version-portable constructor
+    prelude = "from repro.launch.mesh import make_compat_mesh\n"
+    out = subprocess.run([sys.executable, "-c",
+                          prelude + textwrap.dedent(code)],
                          capture_output=True, text=True, env=env, timeout=600)
     assert out.returncode == 0, out.stderr[-4000:]
     return out.stdout
@@ -29,8 +32,7 @@ def test_sharded_nbody_matches_reference():
         from repro.graphs import generators as G
         from repro.graphs.graph import build_graph
         from repro.kernels.nbody.ref import nbody_repulsion_ref
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((4,2), ("data","model"))
         n_pad = 256
         e, n = G.grid(12, 12)
         g = build_graph(e, n, n_pad=n_pad)
@@ -62,8 +64,7 @@ def test_sharded_train_step_matches_single_device():
         batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 64)), jnp.int32),
                  "labels": jnp.asarray(rng.integers(0, cfg.vocab, (4, 64)), jnp.int32)}
         l0, _ = jax.jit(lambda p,b: loss_fn(p, cfg, b))(params, batch)
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((4,2), ("data","model"))
         rules = make_rules(mesh, cfg)
         with use_shardings(mesh, rules):
             sh = param_shardings(mesh, rules, param_specs(cfg, rules))
@@ -80,8 +81,7 @@ def test_ring_collective_matmul_matches_allgather():
     out = run_sub("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.parallel.collectives import ring_collective_matmul
-        mesh = jax.make_mesh((1,8), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((1,8), ("data","model"))
         S, K, N = 64, 32, 48
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.normal(size=(S,K)), jnp.float32)
@@ -123,8 +123,7 @@ def test_shardmap_moe_matches_gspmd():
         from repro.models import moe as MOE
         from repro.configs.base import MoEConfig
         from repro.parallel.sharding import make_rules, use_shardings
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((2,4), ("data","model"))
         m = MoEConfig(n_experts=8, top_k=2, d_expert=16, capacity_factor=2.0)
         p = MOE.init_moe(jax.random.PRNGKey(0), 32, m)
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32), jnp.float32)
@@ -148,8 +147,7 @@ def test_a2a_moe_matches_reference():
         from repro.models import moe as MOE
         from repro.configs.base import MoEConfig
         from repro.parallel.sharding import make_rules, use_shardings
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((2, 4), ("data", "model"))
         m = MoEConfig(n_experts=8, top_k=2, d_expert=16, capacity_factor=4.0)
         p = MOE.init_moe(jax.random.PRNGKey(0), 32, m)
         x = jax.random.normal(jax.random.PRNGKey(1), (8, 32, 32), jnp.float32)
@@ -173,8 +171,7 @@ def test_layout_halo_step_runs():
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.distributed import (layout_train_step,
                                             layout_train_step_halo)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((4, 2), ("data", "model"))
         n_pad, cap = 64, 8
         vsize, n_loc = 4, 16
         halo = n_loc                     # full halo → exactly the AG step
@@ -224,8 +221,7 @@ def test_pipeline_parallel_matches_reference():
         from repro.models import init_params, forward
         from repro.parallel.pipeline import pipeline_forward
         from repro.parallel.sharding import make_rules, use_shardings
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = make_compat_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = get_smoke_config("internlm2-1.8b")
         params = init_params(cfg, jax.random.PRNGKey(0))
         rng = np.random.default_rng(0)
@@ -260,8 +256,7 @@ def test_ring_attention_matches_sdpa():
         import numpy as np, jax, jax.numpy as jnp
         from repro.parallel.ring_attention import ring_attention
         from repro.models.layers import _sdpa
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((2, 4), ("data", "model"))
         rng = np.random.default_rng(0)
         B, S, H, KV, hd = 2, 256, 4, 2, 32
         for dtype, tol in ((jnp.float32, 2e-5), (jnp.bfloat16, 3e-2)):
@@ -290,8 +285,7 @@ def test_small_mesh_dryrun_decode():
         from repro.models import model as M
         from repro.parallel.sharding import make_rules, use_shardings
         cfg = get_smoke_config("gemma-2b")
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((4,2), ("data","model"))
         rules = make_rules(mesh, cfg)
         B, cache = 8, 256
         params_struct = jax.eval_shape(partial(M.init_params, cfg),

@@ -2,6 +2,10 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="dev extra — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.graphs.graph import build_graph, push_max
