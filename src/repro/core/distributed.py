@@ -11,10 +11,19 @@ Decomposition (DESIGN.md §4):
     device's segment-sum lands in its own vertex block; source positions
     come from an all_gather over VTX (8 bytes/vertex — the same per-round
     broadcast volume the paper's Giraph workers pay), or from a halo
-    exchange of only the boundary vertices (optimized variant, §Perf).
+    exchange of only the boundary vertices (optimized variant, §Perf);
+  * the grid-bucketed repulsion (mode="grid", the fine levels of big
+    hierarchies) bins each device's vertex block locally against the
+    psum'd global bounding box, psums the per-cell mass/centroid/second-
+    moment aggregates over the vertex axes (O(G²) floats — cheap),
+    computes the far field from the replicated aggregates with the cell
+    columns split over "model", and resolves the exact 3×3 near field
+    either from an all_gather of the bucketed positions (baseline) or by
+    exchanging only the boundary-cell buckets with the two neighboring
+    shards (halo variant, DESIGN.md §4.3).
 
 Every function here is pure SPMD and lowers on the 512-chip mesh; the
-dry-run rows for the layout engine come from `layout_step_spec` below.
+dry-run rows for the layout engine come from `layout_step_specs` below.
 """
 from __future__ import annotations
 
@@ -144,11 +153,259 @@ def sharded_neighbor_force(mesh: Mesh, n_pad: int, cap: int):
     return jax.jit(fn)
 
 
+# -- grid-bucketed repulsion, sharded (fine levels of big hierarchies) ---------
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _chunk_for(n: int, target: int = 2048) -> int:
+    """Largest divisor of ``n`` that is ≤ ``target`` (near-field row chunk)."""
+    for c in range(min(n, target), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def _grid_rep_spmd(pos_blk, w_blk, C, L, md, *, mesh: Mesh, n_pad: int,
+                   grid_dim: int, cell_cap: int, variant: str, backend: str,
+                   pos_all=None, w_all=None):
+    """SPMD-local grid repulsion for one vertex block (call inside shard_map).
+
+    ``w_blk`` is the vmask-zeroed vertex mass (w = 0 ⇔ padding). Matches the
+    single-device ``grid_repulsion`` composition term for term:
+
+      * global bounding box via pmin/pmax over the vertex axes (exact);
+      * binning: the baseline all_gathers positions/weights (which the
+        full superstep needs for attraction anyway) and reruns the
+        single-device ``bin_vertices`` on the replicated arrays — cell
+        ids, bucket table, and bucket membership are bit-identical to the
+        single-device op at zero extra collectives; the halo variant bins
+        its block locally and uses local stable ranks (the band contract
+        guarantees a cell's vertices share a shard, so local = global);
+      * per-cell raw sums (mass / weighted position / second moment, full
+        and overflow-only) psum'd over the vertex axes: O(G²) floats;
+      * far field = all-cells aggregate term with the cell columns split
+        over "model" (psum), plus the replicated correction terms
+        (`kernels.grid_force.ops.far_corrections`);
+      * near field = exact 3×3-neighborhood pairs for bucketed vertices,
+        evaluated per local vertex in row chunks with the 9·cap partner
+        columns split over "model". Partner buckets come from the
+        replicated bucket table (variant="allgather") or from the
+        band-local bucket table extended by the two ppermute'd boundary
+        rows (variant="halo").
+
+    The halo variant assumes the band contract (DESIGN.md §4.3): device d's
+    vertices lie in grid rows [d·G/vsize, (d+1)·G/vsize). A vertex that
+    violates it is reclassified as bucket overflow: it keeps the exact far
+    field, its neighbors keep a softened aggregate view of its mass, and
+    only its own near field degrades to the softened in-bucket aggregates
+    — graceful degradation, never a blow-up or dropped mass.
+    """
+    from repro.kernels.grid_force import ops as gops
+
+    VTX = vtx_axes(mesh)
+    vsize = _axis_size(mesh, VTX)
+    msize = mesh.shape["model"]
+    G, cap = grid_dim, cell_cap
+    nc = G * G
+    n_loc = pos_blk.shape[0]
+    pos_blk = pos_blk.astype(jnp.float32)
+    w_blk = w_blk.astype(jnp.float32)
+    vmask_blk = w_blk > 0
+    mi = jax.lax.axis_index("model")
+    di = jnp.int32(0)                    # flattened device index over VTX
+    for a in VTX:
+        di = di * mesh.shape[a] + jax.lax.axis_index(a)
+
+    # -- bin against the global bounding box ----------------------------------
+    big = jnp.float32(3e38)
+    lo = jax.lax.pmin(
+        jnp.min(jnp.where(vmask_blk[:, None], pos_blk, big), axis=0), VTX)
+    hi = jax.lax.pmax(
+        jnp.max(jnp.where(vmask_blk[:, None], pos_blk, -big), axis=0), VTX)
+    cell = jnp.maximum(hi - lo, 1e-6) / G
+    bucket = None
+    if variant == "halo":
+        # local binning + local stable ranks (band contract: a cell's
+        # vertices all share this shard, so local ranks are global ranks)
+        ij = jnp.clip(jnp.floor((pos_blk - lo) / cell), 0,
+                      G - 1).astype(jnp.int32)
+        cid = jnp.where(vmask_blk, ij[:, 1] * G + ij[:, 0],
+                        nc).astype(jnp.int32)
+        order = jnp.argsort(cid)         # stable → ascending index in cell
+        sc = cid[order]
+        grank = jnp.zeros((n_loc,), jnp.int32).at[order].set(
+            (jnp.arange(n_loc) - jnp.searchsorted(sc, sc, side="left"))
+            .astype(jnp.int32))
+        Gb = G // vsize
+        nc_band = Gb * G
+        lc = cid - di * nc_band          # band-local cell index
+        band_ok = (lc >= 0) & (lc < nc_band) & (cid < nc)
+        # a band-contract violator counts as bucket OVERFLOW, not in-bucket:
+        # it enters the psum'd overflow aggregates, so its neighbors keep a
+        # softened view of its mass and it keeps the exact far field — only
+        # its own near field degrades (the documented contract)
+        inb = (grank < cap) & band_ok
+    else:
+        # replicated global binning on the all_gathered arrays (the full
+        # superstep gathers positions for attraction anyway): cell ids,
+        # bucket table and bucket membership are bit-identical to the
+        # single-device op, at zero extra collectives
+        if pos_all is None:
+            pos_all = jax.lax.all_gather(pos_blk, VTX, tiled=True)
+            w_all = jax.lax.all_gather(w_blk, VTX, tiled=True)
+        pos_all = pos_all.astype(jnp.float32)
+        w_all = w_all.astype(jnp.float32)
+        cid_all, bucket, inb_all = gops.bin_vertices(pos_all, w_all > 0,
+                                                     G, cap)
+        cid = jax.lax.dynamic_slice_in_dim(cid_all, di * n_loc, n_loc)
+        inb = jax.lax.dynamic_slice_in_dim(inb_all, di * n_loc, n_loc)
+
+    # -- per-cell raw sums, psum'd over the vertex axes (O(G²) floats) --------
+    # second moments about the cell centers, matching cell_centers()'s
+    # conditioning argument (kernels/grid_force/ops.py)
+    centers = gops.cell_centers_from_box(lo, hi, G)
+    q = jnp.sum((pos_blk - centers[cid]) ** 2, axis=1)
+    w_out = jnp.where(inb, 0.0, w_blk)
+
+    def sums(wv):
+        M = jax.ops.segment_sum(wv, cid, num_segments=nc + 1)
+        S = jax.ops.segment_sum(wv[:, None] * pos_blk, cid,
+                                num_segments=nc + 1)
+        Q = jax.ops.segment_sum(wv * q, cid, num_segments=nc + 1)
+        return M, S, Q
+    M_full, S_full, Q_full, M_out, S_out, Q_out = jax.lax.psum(
+        sums(w_blk) + sums(w_out), VTX)
+
+    # -- far field: all-cells term (cell columns split over "model") ----------
+    mu_full = S_full / jnp.maximum(M_full, 1e-12)[:, None]
+    cell_xyw = jnp.concatenate([mu_full[:nc], M_full[:nc, None]], axis=1)
+    ncp = _round_up(nc, msize)
+    cells_p = jnp.pad(cell_xyw, ((0, ncp - nc), (0, 0)))     # pad mass = 0
+    cells_m = jax.lax.dynamic_slice_in_dim(cells_p, mi * (ncp // msize),
+                                           ncp // msize)
+    rep = jax.lax.psum(
+        gops.far_all_cells(pos_blk, cells_m, C, L, md, backend), "model")
+    rep += gops.far_corrections(pos_blk, w_out, cid, inb,
+                                M_full, S_full, Q_full, M_out, S_out, Q_out,
+                                C, L, md, grid_dim=G, centers=centers)
+
+    # -- near field: exact 3×3 pairs, chunked rows × "model"-split columns ----
+    K = 9 * cap
+    Kp = _round_up(K, msize)
+    Kc = Kp // msize
+    ch = _chunk_for(n_loc)
+    if variant == "halo":
+        okb = inb                        # already implies band_ok
+        xyw = jnp.concatenate([pos_blk, w_blk[:, None]], axis=1)
+        tbl = jnp.zeros((nc_band + 1, cap, 3), jnp.float32).at[
+            jnp.where(okb, lc, nc_band), jnp.where(okb, grank, 0)].set(
+            jnp.where(okb[:, None], xyw, 0.0))
+        band = tbl[:nc_band].reshape(Gb, G, cap, 3)
+        # boundary-bucket exchange: first/last grid row to the two neighbors
+        # (2·G·cap·3 floats vs the baseline's n_pad·3-float all_gather);
+        # devices with no peer receive zeros = empty buckets, which is
+        # exactly right for rows beyond the grid.
+        fwd = [(d, d + 1) for d in range(vsize - 1)]
+        bwd = [(d + 1, d) for d in range(vsize - 1)]
+        halo_top = jax.lax.ppermute(band[-1], VTX, fwd)      # d-1's last row
+        halo_bot = jax.lax.ppermute(band[0], VTX, bwd)       # d+1's first row
+        ext = jnp.concatenate([halo_top[None], band, halo_bot[None]], axis=0)
+        sent = (Gb + 2) * G                                  # empty sentinel
+        ext = jnp.concatenate([ext.reshape(sent * cap, 3),
+                               jnp.zeros((cap, 3), jnp.float32)], axis=0)
+        ext = ext.reshape(sent + 1, cap, 3)
+        cx, cy = cid % G, cid // G
+        ey = cy - di * Gb + 1                                # extended row
+        cols = []
+        for oy in (-1, 0, 1):
+            for ox in (-1, 0, 1):
+                nx, ny = cx + ox, cy + oy
+                valid = band_ok & (nx >= 0) & (nx < G) & (ny >= 0) & (ny < G)
+                cols.append(jnp.where(valid, (ey + oy) * G + nx, sent))
+        near9 = jnp.stack(cols, axis=1).astype(jnp.int32)    # [n_loc, 9]
+        near_mask = inb
+
+        def near_chunk(args):
+            pos_c, n9_c = args
+            nbr = ext[n9_c].reshape(-1, K, 3)
+            nbr = jnp.pad(nbr, ((0, 0), (0, Kp - K), (0, 0)))
+            nbr = jax.lax.dynamic_slice_in_dim(nbr, mi * Kc, Kc, axis=1)
+            return gops.near_field(pos_c[:, None, :], nbr[..., :2],
+                                   nbr[..., 2], C, L, md,
+                                   backend=backend)[:, 0]
+    else:
+        pos_p = jnp.concatenate(
+            [pos_all, jnp.zeros((1, 2), jnp.float32)], 0)
+        w_p = jnp.concatenate(
+            [w_all, jnp.zeros((1,), jnp.float32)], 0)
+        table = jnp.asarray(gops.neighbor_table(G))
+        near9 = table[cid]                                   # [n_loc, 9]
+        near_mask = inb
+
+        def near_chunk(args):
+            pos_c, n9_c = args
+            idx = bucket[n9_c].reshape(-1, K)
+            idx = jnp.pad(idx, ((0, 0), (0, Kp - K)), constant_values=n_pad)
+            idx = jax.lax.dynamic_slice_in_dim(idx, mi * Kc, Kc, axis=1)
+            return gops.near_field(pos_c[:, None, :], pos_p[idx], w_p[idx],
+                                   C, L, md, backend=backend)[:, 0]
+
+    f_near = jax.lax.map(near_chunk,
+                         (pos_blk.reshape(n_loc // ch, ch, 2),
+                          near9.reshape(n_loc // ch, ch, 9)))
+    f_near = jax.lax.psum(f_near.reshape(n_loc, 2), "model")
+    rep += jnp.where(near_mask[:, None], f_near, 0.0)
+    return jnp.where(vmask_blk[:, None], rep, 0.0)
+
+
+def sharded_grid_force(mesh: Mesh, n_pad: int, grid_dim: int, cell_cap: int,
+                       variant: str = "allgather",
+                       backend: str | None = None):
+    """Returns a jitted f(pos[n_pad, 2], w[n_pad], params[3]) → forces.
+
+    ``params = [C, L, min_dist]``; ``w`` is the vmask-zeroed vertex mass.
+    Matches the single-device ``grid_repulsion`` (same grid_dim/cell_cap)
+    to float tolerance; see ``_grid_rep_spmd`` for the decomposition and
+    kernels/grid_force/README.md for when variant="halo" beats the
+    all_gather baseline.
+    """
+    assert variant in ("allgather", "halo"), variant
+    assert grid_dim >= 2 and cell_cap >= 1, (grid_dim, cell_cap)
+    VTX = vtx_axes(mesh)
+    vsize = _axis_size(mesh, VTX)
+    assert n_pad % vsize == 0, (n_pad, vsize)
+    if variant == "halo":
+        assert grid_dim % vsize == 0, (grid_dim, vsize)
+    if backend is None:
+        from repro.kernels.grid_force.ops import backend_mode
+        backend = backend_mode()
+
+    def local(pos_blk, w_blk, params):
+        C, L, md = params[0], params[1], params[2]
+        return _grid_rep_spmd(pos_blk, w_blk, C, L, md, mesh=mesh,
+                              n_pad=n_pad, grid_dim=grid_dim,
+                              cell_cap=cell_cap, variant=variant,
+                              backend=backend)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(VTX, None), P(VTX), P()),
+                   out_specs=P(VTX, None))
+    return jax.jit(fn)
+
+
 # -- full distributed layout step (used by the dry-run) ------------------------
 
 def layout_train_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
-                      mode: str = "neighbor"):
+                      mode: str = "neighbor", grid_dim: int = 0,
+                      cell_cap: int = 0):
     """One full distributed GiLA iteration: repulsion + attraction + update.
+
+    ``mode`` is "exact" | "neighbor" | "grid" (the same selection
+    core/schedule.py makes by level size). Grid mode needs the static
+    ``grid_dim``/``cell_cap`` from ``kernels.grid_force.choose_grid`` and
+    ignores ``nbr_idx`` (pass cap = 1 dummies, see ``layout_step_specs``).
 
     Returns (step_fn, input_shardings) suitable for
     jax.jit(step_fn, in_shardings=...).lower(*specs).
@@ -157,6 +414,10 @@ def layout_train_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
     vsize = _axis_size(mesh, VTX)
     n_loc = n_pad // vsize
     msize = mesh.shape["model"]
+    if mode == "grid":
+        assert grid_dim >= 2 and cell_cap >= 1, (grid_dim, cell_cap)
+        from repro.kernels.grid_force.ops import backend_mode
+        grid_backend = backend_mode()
 
     def local(pos_blk, w_blk, nbr_idx, src, dst_local, emask, ewt, params, temp):
         C, L, md = params[0], params[1], params[2]
@@ -177,6 +438,12 @@ def layout_train_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
             rep = jax.lax.psum(
                 jnp.stack([jnp.sum(dx * inv, 1), jnp.sum(dy * inv, 1)], 1),
                 "model")
+        elif mode == "grid":
+            rep = _grid_rep_spmd(pos_blk, w_blk, C, L, md, mesh=mesh,
+                                 n_pad=n_pad, grid_dim=grid_dim,
+                                 cell_cap=cell_cap, variant="allgather",
+                                 backend=grid_backend,
+                                 pos_all=pos_all, w_all=w_all)
         else:
             # split the neighbor cap over the model axis → 2-D decomposition
             ccap = cap // msize
@@ -219,7 +486,8 @@ def layout_train_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
 
 
 def layout_train_step_halo(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
-                           halo: int):
+                           halo: int, mode: str = "neighbor",
+                           grid_dim: int = 0, cell_cap: int = 0):
     """GiLA iteration with HALO EXCHANGE instead of the position all-gather
     (§Perf hillclimb C — the paper's Spinner-locality insight made explicit).
 
@@ -229,10 +497,21 @@ def layout_train_step_halo(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
     (local vertices each peer needs; sentinel-padded) and neighbor lists
     remapped into [local | halo-slot | sentinel] coordinates. Communication
     per superstep drops from all-gather(n·12B) to all_to_all(P·halo·12B).
+
+    ``mode="grid"`` replaces the neighbor-list repulsion with the sharded
+    grid repulsion in its halo variant (boundary-cell bucket ppermute,
+    ``nbr_local`` ignored — pass cap = 1 dummies). The attraction keeps
+    this step's halo machinery, so no superstep all-gathers positions;
+    requires the band contract of ``_grid_rep_spmd``.
     """
     VTX = vtx_axes(mesh)
     vsize = _axis_size(mesh, VTX)
     n_loc = n_pad // vsize
+    if mode == "grid":
+        assert grid_dim >= 2 and cell_cap >= 1, (grid_dim, cell_cap)
+        assert grid_dim % vsize == 0, (grid_dim, vsize)
+        from repro.kernels.grid_force.ops import backend_mode
+        grid_backend = backend_mode()
 
     def local(pos_blk, w_blk, nbr_local, send_idx, src_local, dst_local,
               emask, ewt, params, temp):
@@ -259,12 +538,18 @@ def layout_train_step_halo(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
         full_w = jnp.concatenate([w_blk, halo_w,
                                   jnp.zeros((1,), w_blk.dtype)], 0)
 
-        npos = full_pos[nbr_local]                  # [n_loc, cap, 2]
-        nw = full_w[nbr_local]
-        delta = pos_blk[:, None, :] - npos
-        d2 = jnp.sum(delta * delta, -1) + md * md
-        inv = (C * L * L) * nw / d2
-        rep = jnp.sum(delta * inv[:, :, None], axis=1)
+        if mode == "grid":
+            rep = _grid_rep_spmd(pos_blk, w_blk, C, L, md, mesh=mesh,
+                                 n_pad=n_pad, grid_dim=grid_dim,
+                                 cell_cap=cell_cap, variant="halo",
+                                 backend=grid_backend)
+        else:
+            npos = full_pos[nbr_local]              # [n_loc, cap, 2]
+            nw = full_w[nbr_local]
+            delta = pos_blk[:, None, :] - npos
+            d2 = jnp.sum(delta * delta, -1) + md * md
+            inv = (C * L * L) * nw / d2
+            rep = jnp.sum(delta * inv[:, :, None], axis=1)
 
         ps = full_pos[src_local]
         pd = pos_blk[jnp.clip(dst_local, 0, n_loc - 1)]
@@ -297,9 +582,11 @@ def layout_train_step_halo(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
 
 
 def layout_halo_specs(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
-                      halo: int):
+                      halo: int, mode: str = "neighbor"):
     VTX = vtx_axes(mesh)
     vsize = _axis_size(mesh, VTX)
+    if mode == "grid":
+        cap = 1                          # nbr_local unused in grid mode
     f32, i32 = jnp.float32, jnp.int32
     return dict(
         pos=jax.ShapeDtypeStruct((n_pad, 2), f32),
@@ -315,8 +602,12 @@ def layout_halo_specs(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
     )
 
 
-def layout_step_specs(n_pad: int, m_pad: int, cap: int):
-    """ShapeDtypeStructs for the dry-run (no allocation)."""
+def layout_step_specs(n_pad: int, m_pad: int, cap: int,
+                      mode: str = "neighbor"):
+    """ShapeDtypeStructs for the dry-run (no allocation). In grid mode the
+    neighbor lists are unused; cap collapses to a 1-wide dummy."""
+    if mode == "grid":
+        cap = 1
     f32, i32 = jnp.float32, jnp.int32
     return dict(
         pos=jax.ShapeDtypeStruct((n_pad, 2), f32),
@@ -329,3 +620,101 @@ def layout_step_specs(n_pad: int, m_pad: int, cap: int):
         params=jax.ShapeDtypeStruct((3,), f32),
         temp=jax.ShapeDtypeStruct((), f32),
     )
+
+
+# -- host-side level driver (engine="multigila_dist" in core/multilevel.py) ----
+
+def partition_edges(src, dst, emask, ewt, n_pad: int, vsize: int):
+    """Host-side Spinner-order edge partition: group edges by the device
+    block that owns their destination, pad every block to the max block
+    length, and offset destinations into block-local coordinates.
+
+    Returns (src[m_pad2], dst_local[m_pad2], emask[m_pad2], ewt[m_pad2],
+    m_pad2) laid out so ``P(VTX)`` sharding puts each device exactly its
+    own destination block (padding edges: src = n_pad sentinel, mask off).
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    emask = np.asarray(emask)
+    ewt = np.asarray(ewt)
+    n_loc = n_pad // vsize
+    src, dst, ewt = src[emask], dst[emask], ewt[emask]
+    owner = dst // n_loc
+    m_loc = max(int(np.bincount(owner, minlength=vsize).max()), 1)
+    S = np.full((vsize, m_loc), n_pad, np.int32)
+    DL = np.zeros((vsize, m_loc), np.int32)
+    EM = np.zeros((vsize, m_loc), bool)
+    EW = np.ones((vsize, m_loc), np.float32)
+    for d in range(vsize):
+        sel = owner == d
+        k = int(sel.sum())
+        S[d, :k] = src[sel]
+        DL[d, :k] = dst[sel] - d * n_loc
+        EM[d, :k] = True
+        EW[d, :k] = ewt[sel]
+    return (S.reshape(-1), DL.reshape(-1), EM.reshape(-1), EW.reshape(-1),
+            vsize * m_loc)
+
+
+def run_layout_level(mesh: Mesh, g, pos0, sched, *, ideal_len: float,
+                     rep_const: float, min_dist: float = 1e-3,
+                     seed: int = 0) -> np.ndarray:
+    """Lay out ONE hierarchy level with the distributed superstep.
+
+    Host-side wrapper around ``layout_train_step``: re-pads the level to
+    mesh-divisible sizes, partitions edges by destination shard, builds
+    k-hop lists for mode="neighbor" (global indices — the step gathers
+    from the replicated position table), and runs ``sched.iters`` cooling
+    iterations. Returns positions [g.n_pad, 2] (numpy, padding zeroed),
+    so it is a drop-in for ``gila.gila_layout`` in the multilevel driver.
+    """
+    from repro.core import gila
+    from repro.graphs.graph import unique_edges
+
+    VTX = vtx_axes(mesh)
+    vsize = _axis_size(mesh, VTX)
+    msize = mesh.shape["model"]
+    n_pad = _round_up(g.n_pad, vsize * msize)
+
+    pos = np.zeros((n_pad, 2), np.float32)
+    pos[:g.n_pad] = np.asarray(pos0, np.float32)[:g.n_pad]
+    w = np.zeros((n_pad,), np.float32)
+    w[:g.n_pad] = np.where(np.asarray(g.vmask), np.asarray(g.mass),
+                           0.0).astype(np.float32)
+    pos[w == 0] = 0.0
+
+    src_e, dst_local, emask, ewt, m_pad = partition_edges(
+        np.asarray(g.src), np.asarray(g.dst), np.asarray(g.emask),
+        np.asarray(g.ewt), n_pad, vsize)
+
+    if sched.mode == "neighbor":
+        cap = _round_up(sched.cap, msize)
+        idx, mask = gila.khop_neighbors(unique_edges(g), g.n, sched.k, cap,
+                                        seed)
+        nbr = np.full((n_pad, cap), n_pad, np.int32)
+        nbr[:g.n] = np.where(mask, idx, n_pad)
+    else:
+        cap = 1
+        nbr = np.full((n_pad, 1), n_pad, np.int32)
+
+    step, sh = layout_train_step(mesh, n_pad, m_pad, cap, mode=sched.mode,
+                                 grid_dim=sched.grid_dim,
+                                 cell_cap=sched.cell_cap)
+    jitted = jax.jit(step)
+    dput = jax.device_put
+    pos_d = dput(jnp.asarray(pos), sh["pos"])
+    w_d = dput(jnp.asarray(w), sh["w"])
+    nbr_d = dput(jnp.asarray(nbr), sh["nbr_idx"])
+    src_d = dput(jnp.asarray(src_e), sh["edge"])
+    dst_d = dput(jnp.asarray(dst_local), sh["edge"])
+    em_d = dput(jnp.asarray(emask), sh["edge"])
+    ew_d = dput(jnp.asarray(ewt), sh["edge"])
+    params = dput(jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32),
+                  sh["scalar"])
+    temp = sched.temp0
+    for _ in range(sched.iters):
+        pos_d = jitted(pos_d, w_d, nbr_d, src_d, dst_d, em_d, ew_d, params,
+                       jnp.asarray(temp, jnp.float32))
+        temp *= sched.temp_decay
+    out = np.asarray(pos_d)[:g.n_pad]
+    return np.where(w[:g.n_pad, None] > 0, out, 0.0).astype(np.float32)

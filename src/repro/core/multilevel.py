@@ -4,8 +4,13 @@ pruning â†’ (partitioning) â†’ coarsening* â†’ coarsest layout â†’ [placement â†
 single-level refinement]* â†’ reinsertion, applied per connected component,
 components packed on a shelf grid at the end.
 
-The same driver powers three engines:
+The same driver powers four engines:
   * ``multigila``   â€” the paper's algorithm (distributed-semantics supersteps);
+  * ``multigila_dist`` â€” identical algorithm, but every level's refinement
+                      runs through the *actually sharded* superstep
+                      (core/distributed.py:run_layout_level) on a device
+                      mesh: exact / neighbor / grid repulsion per the same
+                      schedule, SPMD over (data, model);
   * ``centralized`` â€” FMÂ³ stand-in baseline: identical hierarchy, exact
                       all-pairs forces and full iteration budget everywhere;
   * ``flat``        â€” single-level GiLA baseline (the paper's predecessor [5]).
@@ -39,7 +44,9 @@ class LayoutConfig:
     ideal_len: float = 1.0
     rep_const: float = 1.0
     seed: int = 0
-    engine: str = "multigila"        # multigila | centralized | flat
+    engine: str = "multigila"   # multigila | multigila_dist | centralized | flat
+    # multigila_dist (data, model) mesh; None â†’ one mesh over all local devices
+    mesh_shape: tuple | None = None
     prune: bool = True
 
 
@@ -90,6 +97,14 @@ def build_hierarchy(g0: PaddedGraph, cfg: LayoutConfig
 
 def _layout_one_level(g: PaddedGraph, pos0, sched: LevelSchedule,
                       cfg: LayoutConfig, seed: int):
+    if cfg.engine == "multigila_dist":
+        from repro.core.distributed import run_layout_level
+        from repro.launch.mesh import make_compat_mesh, make_host_mesh
+        mesh = (make_compat_mesh(tuple(cfg.mesh_shape), ("data", "model"))
+                if cfg.mesh_shape else make_host_mesh())
+        return run_layout_level(mesh, g, pos0, sched,
+                                ideal_len=cfg.ideal_len,
+                                rep_const=cfg.rep_const, seed=seed)
     if sched.mode == "neighbor":
         nbr_idx, nbr_mask = gila.build_level_neighbors(g, sched.k, sched.cap,
                                                        seed=seed)

@@ -11,6 +11,15 @@ Repulsion-mode selection by level size:
                                        levels of big hierarchies, where
                                        k-hop caps degrade quality and the
                                        host-side list build dominates)
+
+Every mode runs single-device (core/gila.py) and sharded: the schedule's
+``mode``/``grid_dim``/``cell_cap`` feed ``core/distributed.py``'s
+``layout_train_step`` unchanged (engine="multigila_dist" routes whole
+levels through it). The sharded grid path psums O(G²) per-cell aggregates
+and resolves the 3×3 near field from an all_gather of bucketed positions,
+or — when vertices are band-partitioned by grid row — from just the two
+boundary-cell bucket rows (halo variant; it beats the all_gather once
+2·G·cell_cap ≪ n, see kernels/grid_force/README.md and DESIGN.md §4.3).
 """
 from __future__ import annotations
 

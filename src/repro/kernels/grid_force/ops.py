@@ -34,6 +34,12 @@ against the all-pairs oracle on random and clustered inputs.
 
 Set ``REPRO_PALLAS=interpret|ref|pallas`` to force a backend (same
 convention as the other kernel subsystems).
+
+The helpers here are also the building blocks of the *sharded* grid path
+(`core/distributed.py:sharded_grid_force`, DESIGN.md §4.3): binning and the
+per-cell raw sums are local per shard and psum'd over the vertex axes;
+``far_corrections`` then composes the far field from the replicated sums,
+and ``near_field`` resolves the 3×3 near field per shard.
 """
 from __future__ import annotations
 
@@ -58,17 +64,22 @@ def _mode() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def choose_grid(n: int, *, avg_occupancy: int = 12) -> tuple[int, int]:
+def choose_grid(n: int, *, avg_occupancy: int = 12,
+                multiple_of: int = 1) -> tuple[int, int]:
     """Static (grid_dim, cell_cap) for an n-vertex level.
 
     grid_dim targets ``avg_occupancy`` vertices per cell; cell_cap covers
     the mean plus ~6σ of a Poisson cell load (overflow beyond the cap is
     handled by the aggregate terms, so the cap bounds *work*, not
-    correctness).
+    correctness). ``multiple_of`` rounds grid_dim to a multiple — the
+    sharded halo variant bands the grid rows over the vertex shards and
+    needs grid_dim % vsize == 0 (core/distributed.py).
     """
     n = max(int(n), 1)
     G = int(round(math.sqrt(n / avg_occupancy)))
     G = max(2, min(G, 128))
+    if multiple_of > 1:
+        G = max(multiple_of, G // multiple_of * multiple_of)
     avg = n / (G * G)
     cap = int(math.ceil(avg + 6.0 * math.sqrt(avg) + 8.0))
     cap = min(max(8, (cap + 7) // 8 * 8), n)
@@ -166,6 +177,104 @@ def _far_all_cells(pos, cell_xyw, C, L, md, mode: str):
     return out[:n]
 
 
+def near_field(rows_pos, nbr_pos, nbr_w, C, L, min_dist, *,
+               backend: str | None = None, block_cells: int = 1):
+    """Backend-dispatched near-field evaluation (kernel.py vs ref.py).
+
+    rows_pos [R, cap, 2] vs nbr_pos/nbr_w [R, K, 2]/[R, K] → [R, cap, 2].
+    The sharded path calls this per shard with cap = 1 (one row per local
+    vertex); the single-device path with cap = cell_cap (one row per cell).
+    """
+    backend = backend or _mode()
+    if backend == "ref":
+        return grid_near_ref(rows_pos, nbr_pos, nbr_w, C, L, min_dist)
+    return grid_near_pallas(rows_pos, nbr_pos, nbr_w, C, L, min_dist,
+                            block_cells=block_cells,
+                            interpret=(backend == "interpret"))
+
+
+def cell_centers_from_box(lo, hi, grid_dim: int):
+    """Geometric centers of the G×G cells over bounding box (lo, hi):
+    [G²+1, 2] (sentinel row = 0). Shared by the single-device op and the
+    sharded SPMD body (which derives lo/hi by pmin/pmax) so the centered
+    second moments stay bit-identical across the two paths."""
+    G = grid_dim
+    cell = jnp.maximum(hi - lo, 1e-6) / G
+    ids = jnp.arange(G * G)
+    xy = jnp.stack([ids % G, ids // G], axis=1).astype(jnp.float32)
+    ctr = lo[None, :] + (xy + 0.5) * cell[None, :]
+    return jnp.concatenate([ctr, jnp.zeros((1, 2), jnp.float32)], axis=0)
+
+
+def cell_centers(pos, vmask, grid_dim: int):
+    """Geometric centers of the G×G cells over the vertices' bounding box.
+    Second moments are accumulated about these — |pos − center| is at most
+    a cell diagonal, so the RMS-radius cancellation ``Q/M − |µ|²`` stays
+    well-conditioned in f32 no matter where the box sits (a cluster far
+    from the origin would otherwise lose the radius entirely)."""
+    big = jnp.float32(3e38)
+    lo = jnp.min(jnp.where(vmask[:, None], pos, big), axis=0)
+    hi = jnp.max(jnp.where(vmask[:, None], pos, -big), axis=0)
+    return cell_centers_from_box(lo, hi, grid_dim)
+
+
+def _rms(Q, M, S, centers):
+    """Per-cell RMS radius from mass M, weighted-position sum S and the
+    second moment Q accumulated about ``centers``."""
+    mu_rel = S / jnp.maximum(M, _EPS)[:, None] - centers
+    return jnp.sqrt(jnp.maximum(
+        Q / jnp.maximum(M, _EPS) - jnp.sum(mu_rel * mu_rel, axis=1), 0.0))
+
+
+def far_corrections(pos, w_out, cid, inb,
+                    M_full, S_full, Q_full, M_out, S_out, Q_out,
+                    C, L, md, *, grid_dim: int, centers):
+    """Near-9 / overflow correction terms of the far field, computed from
+    *replicated* per-cell raw sums (mass M, weighted position sum S, second
+    moment Q about the cell ``centers``; ``_full`` = every vertex,
+    ``_out`` = bucket-overflow only).
+
+    Returns the per-vertex force to ADD to the all-cells aggregate term
+    (``_far_all_cells``): subtract the 9 near cells' full aggregates (those
+    pairs were counted exactly by the near field), add back the softened
+    overflow aggregates, and — for overflow vertices only, which the exact
+    kernel never sees — the softened in-bucket aggregates of the 9 cells.
+    Shared verbatim between ``grid_repulsion`` and the sharded SPMD body in
+    ``core/distributed.py`` (there the raw sums arrive via psum).
+    """
+    G = grid_dim
+    nc = G * G
+    mu_full = S_full / jnp.maximum(M_full, _EPS)[:, None]
+    mu_out = S_out / jnp.maximum(M_out, _EPS)[:, None]
+    r_out = _rms(Q_out, M_out, S_out, centers)
+    M_in = M_full - M_out
+    S_in = S_full - S_out
+    mu_in = S_in / jnp.maximum(M_in, _EPS)[:, None]
+    r_in = _rms(Q_full - Q_out, M_in, S_in, centers)
+
+    table = jnp.asarray(_neighbor_table(G))
+    near9 = table[cid]                                      # [n, 9]
+    f = -_agg_field_9(pos, mu_full[near9], M_full[near9], C, L, md)
+    # overflow add-back: an overflowed vertex sits inside its own cell's
+    # overflow aggregate, which would exert a spurious self-force — remove
+    # its own (mass, position) from the center cell (table column 4) before
+    # evaluating.
+    m9 = M_out[near9]
+    mu9 = mu_out[near9]
+    m_self = w_out                                          # w if overflowed
+    m_adj = jnp.maximum(M_out[cid] - m_self, 0.0)
+    s_adj = S_out[cid] - m_self[:, None] * pos
+    m9 = m9.at[:, 4].set(m_adj)
+    mu9 = mu9.at[:, 4].set(s_adj / jnp.maximum(m_adj, _EPS)[:, None])
+    f += _agg_field_9(pos, mu9, m9, C, L, md, r9=r_out[near9])
+    # an overflowed vertex also never met the *bucketed* vertices of its
+    # 3×3 neighborhood (it has no bucket row of its own) — restore them as
+    # softened in-bucket aggregates, gated to overflow vertices only
+    f_bkt = _agg_field_9(pos, mu_in[near9], M_in[near9], C, L, md,
+                         r9=r_in[near9])
+    return f + jnp.where(inb, 0.0, 1.0)[:, None] * f_bkt
+
+
 def grid_repulsion(pos, mass, vmask, C, L, min_dist, *,
                    grid_dim: int, cell_cap: int):
     """Grid-approximated FR repulsion: pos f32[n, 2] → forces f32[n, 2].
@@ -184,23 +293,13 @@ def grid_repulsion(pos, mass, vmask, C, L, min_dist, *,
     cid, bucket, inb = bin_vertices(pos, vmask, G, cap)
     M_full, S_full, mu_full = _cell_aggregates(pos, w, cid, nc)
     w_out = jnp.where(inb, 0.0, w)
-    M_out, S_out, mu_out = _cell_aggregates(pos, w_out, cid, nc)
-    # per-cell second moments → RMS radii (for near-range softening)
-    Q_full = jax.ops.segment_sum(w * jnp.sum(pos * pos, axis=1), cid,
-                                 num_segments=nc + 1)
-    Q_out = jax.ops.segment_sum(w_out * jnp.sum(pos * pos, axis=1), cid,
-                                num_segments=nc + 1)
-
-    def _rms(Q, M, mu):
-        return jnp.sqrt(jnp.maximum(
-            Q / jnp.maximum(M, _EPS) - jnp.sum(mu * mu, axis=1), 0.0))
-
-    r_out = _rms(Q_out, M_out, mu_out)
-    # in-bucket complements (overflow vertices see these as aggregates)
-    M_in = M_full - M_out
-    S_in = S_full - S_out
-    mu_in = S_in / jnp.maximum(M_in, _EPS)[:, None]
-    r_in = _rms(Q_full - Q_out, M_in, mu_in)
+    M_out, S_out, _ = _cell_aggregates(pos, w_out, cid, nc)
+    # per-cell second moments → RMS radii (for near-range softening),
+    # accumulated about the cell centers (see cell_centers on conditioning)
+    centers = cell_centers(pos, vmask, G)
+    q = jnp.sum((pos - centers[cid]) ** 2, axis=1)
+    Q_full = jax.ops.segment_sum(w * q, cid, num_segments=nc + 1)
+    Q_out = jax.ops.segment_sum(w_out * q, cid, num_segments=nc + 1)
 
     # -- near field: exact within the 3×3 neighborhood ------------------------
     table = jnp.asarray(_neighbor_table(G))                 # [nc+1, 9]
@@ -211,36 +310,23 @@ def grid_repulsion(pos, mass, vmask, C, L, min_dist, *,
     nbr_bucket = bucket[table[:nc]].reshape(nc, 9 * cap)
     nbr_pos = pos_p[nbr_bucket]
     nbr_w = w_p[nbr_bucket]
-    if mode == "ref":
-        near = grid_near_ref(rows_pos, nbr_pos, nbr_w, C, L, min_dist)
-    else:
-        near = grid_near_pallas(rows_pos, nbr_pos, nbr_w, C, L, min_dist,
-                                interpret=(mode == "interpret"))
+    near = near_field(rows_pos, nbr_pos, nbr_w, C, L, min_dist, backend=mode)
     f_near = jnp.zeros((n + 1, 2), jnp.float32).at[
         rows_idx.reshape(-1)].set(near.reshape(-1, 2))[:n]
 
     # -- far field: all-cell aggregates, near cells swapped for overflow ------
     cell_xyw = jnp.concatenate([mu_full[:nc], M_full[:nc, None]], axis=1)
     f_far = _far_all_cells(pos, cell_xyw, C, L, min_dist, mode)
-    near9 = table[cid]                                      # [n, 9]
-    f_far -= _agg_field_9(pos, mu_full[near9], M_full[near9], C, L, min_dist)
-    # overflow add-back: an overflowed vertex sits inside its own cell's
-    # overflow aggregate, which would exert a spurious self-force — remove
-    # its own (mass, position) from the center cell (table column 4) before
-    # evaluating.
-    m9 = M_out[near9]
-    mu9 = mu_out[near9]
-    m_self = w_out                                          # w if overflowed
-    m_adj = jnp.maximum(M_out[cid] - m_self, 0.0)
-    s_adj = S_out[cid] - m_self[:, None] * pos
-    m9 = m9.at[:, 4].set(m_adj)
-    mu9 = mu9.at[:, 4].set(s_adj / jnp.maximum(m_adj, _EPS)[:, None])
-    f_far += _agg_field_9(pos, mu9, m9, C, L, min_dist, r9=r_out[near9])
-    # an overflowed vertex also never met the *bucketed* vertices of its
-    # 3×3 neighborhood (it has no bucket row of its own) — restore them as
-    # softened in-bucket aggregates, gated to overflow vertices only
-    f_bkt = _agg_field_9(pos, mu_in[near9], M_in[near9], C, L, min_dist,
-                         r9=r_in[near9])
-    f_far += jnp.where(inb, 0.0, 1.0)[:, None] * f_bkt
+    f_far += far_corrections(pos, w_out, cid, inb,
+                             M_full, S_full, Q_full, M_out, S_out, Q_out,
+                             C, L, min_dist, grid_dim=G, centers=centers)
 
     return jnp.where(vmask[:, None], f_near + f_far, 0.0)
+
+
+# public aliases for the sharded path (core/distributed.py) and tests
+neighbor_table = _neighbor_table
+cell_aggregates = _cell_aggregates
+agg_field_9 = _agg_field_9
+far_all_cells = _far_all_cells
+backend_mode = _mode

@@ -310,10 +310,12 @@ def analyze(compiled, cfg, cell, mesh, compile_s, opts):
 
 # -- layout-engine dry-run rows ---------------------------------------------------
 
-def lower_layout(mesh, n_pad: int, m_pad: int, cap: int, mode: str):
+def lower_layout(mesh, n_pad: int, m_pad: int, cap: int, mode: str,
+                 grid_dim: int = 0, cell_cap: int = 0):
     from repro.core.distributed import layout_train_step, layout_step_specs
-    step, shardings = layout_train_step(mesh, n_pad, m_pad, cap, mode=mode)
-    specs = layout_step_specs(n_pad, m_pad, cap)
+    step, shardings = layout_train_step(mesh, n_pad, m_pad, cap, mode=mode,
+                                        grid_dim=grid_dim, cell_cap=cell_cap)
+    specs = layout_step_specs(n_pad, m_pad, cap, mode=mode)
     in_sh = (shardings["pos"], shardings["w"], shardings["nbr_idx"],
              shardings["edge"], shardings["edge"], shardings["edge"],
              shardings["edge"], shardings["scalar"], shardings["scalar"])
@@ -326,11 +328,15 @@ def lower_layout(mesh, n_pad: int, m_pad: int, cap: int, mode: str):
     return compiled, time.time() - t0
 
 
-def lower_layout_halo(mesh, n_pad: int, m_pad: int, cap: int, halo: int):
+def lower_layout_halo(mesh, n_pad: int, m_pad: int, cap: int, halo: int,
+                      mode: str = "neighbor", grid_dim: int = 0,
+                      cell_cap: int = 0):
     from repro.core.distributed import (layout_train_step_halo,
                                         layout_halo_specs)
-    step, sh = layout_train_step_halo(mesh, n_pad, m_pad, cap, halo)
-    specs = layout_halo_specs(mesh, n_pad, m_pad, cap, halo)
+    step, sh = layout_train_step_halo(mesh, n_pad, m_pad, cap, halo,
+                                      mode=mode, grid_dim=grid_dim,
+                                      cell_cap=cell_cap)
+    specs = layout_halo_specs(mesh, n_pad, m_pad, cap, halo, mode=mode)
     in_sh = (sh["pos"], sh["w"], sh["nbr_idx"], sh["send"], sh["edge"],
              sh["edge"], sh["edge"], sh["edge"], sh["scalar"], sh["scalar"])
     jitted = jax.jit(step, in_shardings=in_sh)
@@ -345,28 +351,35 @@ def lower_layout_halo(mesh, n_pad: int, m_pad: int, cap: int, halo: int):
 
 def run_layout_suite(meshes, outdir):
     from repro.configs.multigila import BIG_GRAPH_DRYRUN
+    from repro.kernels.grid_force.ops import choose_grid
     results = []
     for mesh_name, mesh in meshes:
         for gname, spec in BIG_GRAPH_DRYRUN.items():
-            for mode in ("neighbor", "exact", "halo"):
+            for mode in ("neighbor", "exact", "halo", "grid", "grid_halo"):
                 if mode == "exact" and spec["n_pad"] > (1 << 16):
                     continue  # exact N-body only on coarse levels
-                if mode == "halo" and spec["n_pad"] <= (1 << 16):
-                    continue  # halo exchange targets the fine levels
+                if mode in ("halo", "grid", "grid_halo") \
+                        and spec["n_pad"] <= (1 << 16):
+                    continue  # halo/grid target the fine levels
                 tag = f"layout_{gname}_{mode}"
                 try:
-                    if mode == "halo":
-                        vsize = int(np.prod(
-                            [mesh.shape[a] for a in mesh.axis_names
-                             if a != "model"]))
+                    vsize = int(np.prod(
+                        [mesh.shape[a] for a in mesh.axis_names
+                         if a != "model"]))
+                    G, cc = choose_grid(
+                        spec["n_pad"],
+                        multiple_of=vsize if mode == "grid_halo" else 1)
+                    if mode in ("halo", "grid_halo"):
                         halo = max(spec["n_pad"] // vsize // 8, 128)
                         compiled, cs = lower_layout_halo(
                             mesh, spec["n_pad"], spec["m_pad"], spec["cap"],
-                            halo)
+                            halo,
+                            mode="grid" if mode == "grid_halo" else "neighbor",
+                            grid_dim=G, cell_cap=cc)
                     else:
-                        compiled, cs = lower_layout(mesh, spec["n_pad"],
-                                                    spec["m_pad"],
-                                                    spec["cap"], mode)
+                        compiled, cs = lower_layout(
+                            mesh, spec["n_pad"], spec["m_pad"], spec["cap"],
+                            mode, grid_dim=G, cell_cap=cc)
                     ma = compiled.memory_analysis()
                     cost = RL.analyze_text(compiled.as_text(),
                                            world=int(mesh.devices.size))

@@ -26,7 +26,11 @@ def main(argv=None):
                     help="generator name from repro.graphs.generators")
     ap.add_argument("--args", nargs="*", type=float, default=[20, 20])
     ap.add_argument("--engine", default="multigila",
-                    choices=["multigila", "centralized", "flat"])
+                    choices=["multigila", "multigila_dist", "centralized",
+                             "flat"])
+    ap.add_argument("--mesh", default="",
+                    help="multigila_dist mesh as DATAxMODEL, e.g. 4x2 "
+                         "(default: one mesh over all local devices)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--svg", default="")
     ap.add_argument("--no-cre", action="store_true")
@@ -37,7 +41,10 @@ def main(argv=None):
     edges, n = gen(*gargs)
     print(f"graph {args.graph}{tuple(gargs)}: n={n} m={len(edges)}")
 
-    cfg = LayoutConfig(engine=args.engine, seed=args.seed)
+    mesh_shape = (tuple(int(s) for s in args.mesh.split("x"))
+                  if args.mesh else None)
+    cfg = LayoutConfig(engine=args.engine, seed=args.seed,
+                       mesh_shape=mesh_shape)
     t0 = time.perf_counter()
     pos, stats = multigila_layout(edges, n, cfg)
     dt = time.perf_counter() - t0

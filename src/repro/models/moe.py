@@ -72,7 +72,8 @@ def apply_moe_shardmap(p, x, m, activation: str = "swiglu"):
     cross-EP communication needed is the combine-reduction (psum of the
     per-rank partial outputs), the same volume as one dense TP layer.
     GSPMD's scatter/gather partitioning of the jnp formulation instead
-    produces full-buffer all-reduces (~40× the bytes — measured in
+    produces full-buffer all-reduces (~6× the collective bytes on the
+    8-device smoke config, growing with E·capacity — measured in
     EXPERIMENTS.md §Perf).
     """
     from repro.parallel.sharding import current_rules

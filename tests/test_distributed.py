@@ -164,6 +164,174 @@ def test_a2a_moe_matches_reference():
     assert "OK" in out
 
 
+def test_sharded_grid_force_matches_single_device():
+    """Tentpole parity: the sharded grid repulsion (psum'd aggregates +
+    all_gathered bucketed positions) matches single-device grid_repulsion
+    within 1e-4 relative error — uniform AND cell-overflow inputs."""
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import distributed as D
+        from repro.kernels.grid_force.ops import (grid_repulsion, choose_grid,
+                                                  bin_vertices)
+        mesh = make_compat_mesh((4, 2), ("data", "model"))
+        n_pad = 512
+        rng = np.random.default_rng(0)
+        params = jnp.asarray([1.2, 0.9, 1e-2], jnp.float32)
+        # uniform case (with masked padding), then a tight cluster that
+        # overflows its cell's bucket cap
+        uni = (rng.random((n_pad, 2)) * 10).astype(np.float32)
+        vmask = rng.random(n_pad) > 0.1
+        uni = np.where(vmask[:, None], uni, 0.0).astype(np.float32)
+        w_uni = np.where(vmask, rng.random(n_pad) + 0.5, 0.0)
+        clu = np.concatenate([rng.normal(0, 0.05, (200, 2)),
+                              rng.random((n_pad - 200, 2)) * 8])
+        w_clu = rng.random(n_pad) + 0.5
+        for name, pos, w in (("uniform", uni, w_uni),
+                             ("overflow", clu, w_clu)):
+            pos = jnp.asarray(pos, jnp.float32)
+            w = jnp.asarray(w, jnp.float32)
+            G, cap = choose_grid(n_pad)
+            if name == "overflow":
+                _, _, inb = bin_vertices(pos, w > 0, G, cap)
+                assert int((~np.asarray(inb)).sum()) > 50   # caps overflowed
+            fn = D.sharded_grid_force(mesh, n_pad, G, cap)
+            got = np.asarray(fn(pos, w, params))
+            ref = grid_repulsion(pos, w, w > 0, 1.2, 0.9, 1e-2,
+                                 grid_dim=G, cell_cap=cap)
+            ref = np.asarray(jnp.where((w > 0)[:, None], ref, 0.0))
+            rel = np.abs(got - ref).max() / np.abs(ref).max()
+            assert rel < 1e-4, (name, rel)
+            print("OK", name, rel)
+    """)
+    assert out.count("OK") == 2
+
+
+def test_sharded_grid_force_halo_matches_under_band_partition():
+    """Halo variant: exchanging only the two boundary-cell bucket rows
+    reproduces grid_repulsion when each shard's vertices sit in its grid
+    row band — including a bucket-overflow cluster inside one band."""
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import distributed as D
+        from repro.kernels.grid_force.ops import grid_repulsion, bin_vertices
+        mesh = make_compat_mesh((4, 2), ("data", "model"))
+        n_pad, vsize = 512, 4
+        n_loc = n_pad // vsize
+        G, cap = 8, 16                       # G % vsize == 0 (band contract)
+        rng = np.random.default_rng(1)
+        # device d's block lies in grid rows [2d, 2d+2) of a [0,10)² box
+        pos = np.zeros((n_pad, 2), np.float32)
+        for d in range(vsize):
+            ylo, yhi = d * 2.5 + 0.05, (d + 1) * 2.5 - 0.05
+            blk = rng.random((n_loc, 2)).astype(np.float32)
+            pos[d*n_loc:(d+1)*n_loc, 0] = blk[:, 0] * 10
+            pos[d*n_loc:(d+1)*n_loc, 1] = ylo + blk[:, 1] * (yhi - ylo)
+        pos[0] = (0.0, 0.0); pos[-1] = (10.0, 10.0)   # pin the bbox
+        # overflow: cram 40 > cap vertices of block 1 into one cell
+        pos[n_loc:n_loc + 40] = (5.2, 3.1) + \\
+            rng.normal(0, 0.02, (40, 2)).astype(np.float32)
+        w = (rng.random(n_pad) + 0.5).astype(np.float32)
+        params = jnp.asarray([1.2, 0.9, 1e-2], jnp.float32)
+        _, _, inb = bin_vertices(jnp.asarray(pos), jnp.ones(n_pad, bool),
+                                 G, cap)
+        assert int((~np.asarray(inb)).sum()) > 10
+        fn = D.sharded_grid_force(mesh, n_pad, G, cap, variant="halo")
+        got = np.asarray(fn(jnp.asarray(pos), jnp.asarray(w), params))
+        ref = np.asarray(grid_repulsion(jnp.asarray(pos), jnp.asarray(w),
+                                        jnp.ones(n_pad, bool), 1.2, 0.9,
+                                        1e-2, grid_dim=G, cell_cap=cap))
+        rel = np.abs(got - ref).max() / np.abs(ref).max()
+        assert rel < 1e-4, rel
+        print("OK", rel)
+        # band-contract violation degrades gracefully: the violator is
+        # reclassified as overflow (softened far-field forces, mass kept
+        # for its neighbors), everyone else stays on the single-device op
+        pos[5] = (5.0, 9.0)              # stored on shard 0, sits in band 3
+        got = np.asarray(fn(jnp.asarray(pos), jnp.asarray(w), params))
+        ref = np.asarray(grid_repulsion(jnp.asarray(pos), jnp.asarray(w),
+                                        jnp.ones(n_pad, bool), 1.2, 0.9,
+                                        1e-2, grid_dim=G, cell_cap=cap))
+        assert np.isfinite(got).all()
+        assert np.linalg.norm(got[5]) > 0.1 * np.linalg.norm(ref[5])
+        others = np.delete(np.arange(n_pad), 5)
+        rel = np.abs(got[others] - ref[others]).max() / np.abs(ref).max()
+        assert rel < 0.05, rel
+        print("OK violation", rel)
+    """)
+    assert out.count("OK") == 2
+
+
+def test_layout_grid_step_lowers_and_matches():
+    """Acceptance: layout_train_step(mode="grid") lowers under shard_map on
+    a 4-vertex-shard mesh and one superstep equals the single-device update
+    built from grid_repulsion, within 1e-4 relative error."""
+    out = run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.distributed import layout_train_step, layout_step_specs
+        from repro.kernels.grid_force.ops import grid_repulsion, choose_grid
+        mesh = make_compat_mesh((4, 2), ("data", "model"))
+        n_pad, m_pad = 512, 64
+        G, cap = choose_grid(n_pad)
+        rng = np.random.default_rng(3)
+        pos = (rng.random((n_pad, 2)) * 10).astype(np.float32)
+        w = (rng.random(n_pad) + 0.5).astype(np.float32)
+        nbr = np.full((n_pad, 1), n_pad, np.int32)
+        # no edges → the superstep is repulsion + clamped update only
+        src = np.full(m_pad, n_pad, np.int32)
+        dst_l = np.zeros(m_pad, np.int32)
+        emask = np.zeros(m_pad, bool)
+        ewt = np.ones(m_pad, np.float32)
+        params = jnp.asarray([1.2, 0.9, 1e-2], jnp.float32)
+        temp = jnp.asarray(0.5, jnp.float32)
+        step, sh = layout_train_step(mesh, n_pad, m_pad, 1, mode="grid",
+                                     grid_dim=G, cell_cap=cap)
+        specs = layout_step_specs(n_pad, m_pad, 1, mode="grid")
+        lowered = jax.jit(step, in_shardings=(
+            sh["pos"], sh["w"], sh["nbr_idx"], sh["edge"], sh["edge"],
+            sh["edge"], sh["edge"], sh["scalar"], sh["scalar"])).lower(
+            specs["pos"], specs["w"], specs["nbr_idx"], specs["src"],
+            specs["dst_local"], specs["emask"], specs["ewt"],
+            specs["params"], specs["temp"])
+        lowered.compile()                    # sharding config is coherent
+        got = np.asarray(jax.jit(step)(pos, w, nbr, src, dst_l, emask, ewt,
+                                       params, temp))
+        f = grid_repulsion(jnp.asarray(pos), jnp.asarray(w),
+                           jnp.ones(n_pad, bool), 1.2, 0.9, 1e-2,
+                           grid_dim=G, cell_cap=cap)
+        norm = jnp.sqrt(jnp.sum(f * f, 1) + 1e-12)
+        ref = np.asarray(pos + f / norm[:, None]
+                         * jnp.minimum(norm, temp)[:, None])
+        rel = np.abs(got - ref).max() / (np.abs(ref).max() + 1e-9)
+        assert rel < 1e-4, rel
+        print("OK", rel)
+    """)
+    assert "OK" in out
+
+
+def test_multigila_dist_engine_end_to_end():
+    """engine="multigila_dist": the full multilevel pipeline with every
+    level refined by the sharded superstep (exact/neighbor/grid by size)
+    produces a finite layout that untangles the graph."""
+    out = run_sub("""
+        import numpy as np
+        from repro.graphs import generators as G
+        from repro.graphs.graph import build_graph
+        from repro.graphs.metrics import sampled_stress
+        from repro.core import multigila_layout, LayoutConfig
+        from repro.core.gila import random_init
+        edges, n = G.grid(18, 18)
+        pos, stats = multigila_layout(edges, n, LayoutConfig(
+            seed=0, engine="multigila_dist", mesh_shape=(4, 2)))
+        assert np.isfinite(pos).all()
+        g = build_graph(edges, n)
+        p0 = np.asarray(random_init(g, 6.0, 0))[:n]
+        s0, s1 = sampled_stress(p0, edges, n), sampled_stress(pos, edges, n)
+        assert s1 < s0 * 0.5, (s0, s1)
+        print("OK", stats.levels, s0, s1)
+    """)
+    assert "OK" in out
+
+
 def test_layout_halo_step_runs():
     """§Perf hillclimb C: halo-exchange superstep compiles and matches the
     all-gather superstep when every neighbor is covered by the halo."""

@@ -1,0 +1,55 @@
+"""Docs-consistency check (CI): every Markdown file referenced from the
+source tree must exist.
+
+Scans ``src/**/*.py`` (docstrings + comments + string literals) for
+references to Markdown files and resolves each against the repo root, the
+source roots, and the referencing file's own directory. Fails listing the
+dangling references — this is what keeps citations like "DESIGN.md §4.3"
+honest.
+
+    python tools/check_docs.py
+
+Paths under results/ are generated outputs, not docs, and are skipped.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+MD_REF = re.compile(r"[\w][\w./-]*\.md\b")
+
+
+def references(py: pathlib.Path) -> set[str]:
+    refs = set()
+    for tok in MD_REF.findall(py.read_text(encoding="utf-8")):
+        tok = tok.lstrip("./")
+        if tok.startswith("results/"):
+            continue                       # generated output, not a doc
+        refs.add(tok)
+    return refs
+
+
+def resolves(ref: str, py: pathlib.Path) -> bool:
+    bases = [REPO, REPO / "src", REPO / "src" / "repro", py.parent]
+    return any((b / ref).is_file() for b in bases)
+
+
+def main() -> int:
+    missing = []
+    for py in sorted((REPO / "src").rglob("*.py")):
+        for ref in sorted(references(py)):
+            if not resolves(ref, py):
+                missing.append((py.relative_to(REPO), ref))
+    if missing:
+        print("dangling Markdown references:")
+        for py, ref in missing:
+            print(f"  {py}: {ref}")
+        return 1
+    print("docs consistency OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
