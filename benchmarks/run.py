@@ -17,10 +17,10 @@ def main(argv=None) -> None:
     ap.add_argument("--small", action="store_true",
                     help="CI-sized instances")
     ap.add_argument("--only", default="",
-                    help="comma list: table1,fig5,table3,kernels")
+                    help="comma list: table1,fig5,table3,kernels,serve")
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else {
-        "table1", "fig5", "table3", "kernels"}
+        "table1", "fig5", "table3", "kernels", "serve"}
 
     csv = []
     if "table1" in want:
@@ -41,6 +41,10 @@ def main(argv=None) -> None:
         print("== Kernel + per-arch step micro-benchmarks ==", flush=True)
         from benchmarks import kernel_bench as kb
         csv += kb.csv_rows(kb.run(small=args.small))
+    if "serve" in want:
+        print("== Serving: batched viewport-query throughput ==", flush=True)
+        from benchmarks import serve_bench as sb
+        csv += sb.csv_rows(sb.run(small=args.small))
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv:

@@ -1,0 +1,54 @@
+"""Serving-path micro-benchmark: batched viewport query throughput.
+
+Builds a layout + tile pyramid in-process, then measures the jitted
+batched resolver closed-loop at B ∈ {1, 16, 64} — the BatchLayout-style
+claim that batching independent requests into one device program is
+where query throughput comes from. The ≥100k-vertex acceptance run goes
+through ``repro.launch.serve --build/--bench`` (EXPERIMENTS.md §Serving);
+this module keeps a CI-sized version in the benchmark harness.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def run(small: bool = False):
+    from repro.graphs import generators as G
+    from repro.core import multigila_layout, LayoutConfig
+    from repro.serve import build_pyramid, QueryEngine
+    from repro.serve.query import random_viewports
+
+    n_target = 2_000 if small else 20_000
+    edges, n = G.gnp(n_target, 4.0, seed=0)
+    cfg = LayoutConfig(seed=0, coarsest_iters=60, finest_iters=10)
+    pos, stats, exp = multigila_layout(edges, n, cfg, export=True)
+    pyr = build_pyramid(exp)
+    eng = QueryEngine(pyr)
+    zoom_max = max(b.zoom for b in pyr.bands)
+
+    rows = []
+    reqs = 128 if small else 512
+    base_qps = None
+    for B in (1, 16, 64):
+        boxes, zs = random_viewports(pyr.lo, pyr.hi, zoom_max,
+                                     max(reqs, B), seed=1)
+        eng.query(boxes[:B], zs[:B])                      # compile
+        n_batches = len(boxes) // B
+        t0 = time.perf_counter()
+        for i in range(n_batches):
+            eng.query(boxes[i * B:(i + 1) * B], zs[i * B:(i + 1) * B])
+        dt = time.perf_counter() - t0
+        qps = n_batches * B / dt
+        base_qps = base_qps or qps
+        us_per_req = dt / (n_batches * B) * 1e6
+        rows.append((f"serve_query_B{B}_n{n}", us_per_req,
+                     f"qps={qps:.0f} speedup_vs_B1={qps / base_qps:.1f}x"))
+        print(f"  serve B={B:3d}: {qps:9.1f} qps "
+              f"({us_per_req:8.1f} us/request)", flush=True)
+    return rows
+
+
+def csv_rows(rows):
+    return rows

@@ -1,0 +1,52 @@
+"""Serving example: layout a graph, build the quadtree tile pyramid, and
+answer concurrent viewport queries through the micro-batching front door
+(the layout-serving analogue of examples/serve_decode.py's batched
+prefill).
+
+    PYTHONPATH=src python examples/serve_viewports.py
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import multigila_layout, LayoutConfig
+from repro.graphs import generators
+from repro.serve import build_pyramid, QueryEngine, MicroBatcher
+from repro.serve.query import random_viewports
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="gnp")
+    ap.add_argument("--args", nargs="*", type=float, default=[3000, 4.0])
+    ap.add_argument("--requests", type=int, default=64)
+    args = ap.parse_args()
+
+    edges, n, gargs = generators.from_cli(args.graph, args.args)
+    print(f"layout {args.graph}{gargs}: n={n} m={len(edges)}")
+    pos, stats, exp = multigila_layout(
+        edges, n, LayoutConfig(seed=0, coarsest_iters=60, finest_iters=10),
+        export=True)
+    pyr = build_pyramid(exp)
+    print("bands:", [(b.zoom, b.n, b.m) for b in pyr.bands])
+
+    eng = QueryEngine(pyr)
+    eng.warmup((1, 16, 64))
+    mb = MicroBatcher(eng, max_batch=64, window_s=0.002)
+    zoom_max = max(b.zoom for b in pyr.bands)
+    boxes, zs = random_viewports(pyr.lo, pyr.hi, zoom_max, args.requests)
+    t0 = time.perf_counter()
+    futs = [mb.submit(boxes[i], int(zs[i])) for i in range(args.requests)]
+    results = [f.result(timeout=60) for f in futs]
+    dt = time.perf_counter() - t0
+    mb.close()
+    nv = np.array([len(r["vid"]) for r in results])
+    print(f"{args.requests} viewports in {dt*1e3:.1f} ms "
+          f"({args.requests/dt:.0f} qps) via {mb.batches} device batch(es); "
+          f"vertices/viewport min/median/max = "
+          f"{nv.min()}/{int(np.median(nv))}/{nv.max()}")
+
+
+if __name__ == "__main__":
+    main()

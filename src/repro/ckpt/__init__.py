@@ -1,2 +1,3 @@
 from repro.ckpt.checkpoint import (CheckpointManager, save_checkpoint,
-                                   restore_checkpoint, latest_step)
+                                   restore_checkpoint, latest_step,
+                                   save_npz, load_npz, array_digest)

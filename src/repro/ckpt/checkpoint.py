@@ -49,6 +49,28 @@ def _digest(arrays: dict[str, np.ndarray]) -> str:
     return h.hexdigest()
 
 
+def array_digest(arrays: dict[str, np.ndarray]) -> str:
+    """Public prefix-digest over a named array dict (shared by checkpoints
+    and the serving tile store's shard manifests)."""
+    return _digest(arrays)
+
+
+def save_npz(path: str, arrays: dict[str, np.ndarray]) -> None:
+    """Atomic uncompressed npz shard write: tmp → fsync → rename, same
+    torn-write guarantee as checkpoint directories."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def load_npz(path: str) -> dict[str, np.ndarray]:
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
 def save_checkpoint(directory: str, step: int, tree) -> str:
     os.makedirs(directory, exist_ok=True)
     paths, leaves, _ = _flatten_with_paths(tree)

@@ -3,7 +3,8 @@
 # TPU-native JAX (dense supersteps + shard_map distribution).
 from repro.core.multilevel import (LayoutConfig, LayoutStats, multigila_layout,
                                    layout_component, build_hierarchy,
-                                   connected_components)
+                                   connected_components, LevelExport,
+                                   HierarchyExport)
 from repro.core.solar_merger import (run_merger, next_level, init_state,
                                      MergerState, LevelInfo,
                                      UNASSIGNED, SUN, PLANET, MOON)

@@ -58,6 +58,36 @@ class LayoutStats:
     supersteps: int = 0
 
 
+@dataclasses.dataclass
+class LevelExport:
+    """One level of the hierarchy, as the serving layer consumes it.
+
+    Level 0 is the FULL input graph (pruned leaves reinserted); levels
+    1..L-1 are the solar-merger coarse graphs. ``parent[v]`` is v's vertex
+    in the next coarser level (None at the coarsest); ``rep[v]`` is the
+    level-0 vertex id of the system sun v collapses to, chained down the
+    hierarchy — coarse vertices stay addressable in input-graph terms.
+    """
+    n: int
+    edges: np.ndarray            # int64[m, 2] — unique undirected, level-local
+    parent: np.ndarray | None    # int32[n] — index into the next coarser level
+    rep: np.ndarray              # int64[n] — representative level-0 vertex id
+
+
+@dataclasses.dataclass
+class HierarchyExport:
+    """Per-level structure of a finished layout (serve/tiles.py input).
+
+    ``pos`` holds final positions for level 0 only; coarse-level positions
+    are *derived* (mass-weighted member centroids) so every zoom band of the
+    tile pyramid agrees with the drawing the user actually gets — the
+    interior-level positions computed mid-refinement do not (fine refinement
+    moves vertices after the coarse level is abandoned).
+    """
+    levels: list            # list[LevelExport], levels[0] = finest
+    pos: np.ndarray         # float32[levels[0].n, 2]
+
+
 def connected_components(edges: np.ndarray, n: int) -> np.ndarray:
     """Union-find component labels (host)."""
     parent = np.arange(n, dtype=np.int64)
@@ -120,12 +150,63 @@ def _layout_one_level(g: PaddedGraph, pos0, sched: LevelSchedule,
         grid_dim=sched.grid_dim, cell_cap=sched.cell_cap)
 
 
-def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig
-                     ) -> tuple[np.ndarray, LayoutStats]:
-    """Multi-GiLA on one connected component; returns positions [n,2]."""
+def _single_level_export(edges: np.ndarray, n: int, pos: np.ndarray
+                         ) -> HierarchyExport:
+    lvl = LevelExport(n=n, edges=np.asarray(edges, np.int64).reshape(-1, 2),
+                      parent=None, rep=np.arange(n, dtype=np.int64))
+    return HierarchyExport(levels=[lvl], pos=np.asarray(pos, np.float32))
+
+
+def _input_to_work(pr, n: int) -> np.ndarray:
+    """int64[n]: input vertex → work-graph (pruned) vertex. Leaf hosts are
+    always kept (a host had degree ≥ 2, or is the kept end of a K2), so one
+    indirection suffices."""
+    if pr is None:
+        return np.arange(n, dtype=np.int64)
+    m = np.full(n, -1, np.int64)
+    m[pr.old_of_new] = np.arange(pr.n)
+    m[pr.leaves] = m[pr.leaf_host]
+    return m
+
+
+def _build_export(edges, n, pr, graphs, infos, pos_full) -> HierarchyExport:
+    """Assemble the per-level export of one component (see HierarchyExport)."""
+    L = len(graphs)
+    if L <= 1:
+        return _single_level_export(edges, n, pos_full)
+    w_of_in = _input_to_work(pr, n)
+    work_parent = np.asarray(infos[0].parent_coarse)[: graphs[0].n]
+    rep_work = (pr.old_of_new if pr is not None
+                else np.arange(n, dtype=np.int64))
+    levels = [LevelExport(n=n, edges=np.asarray(edges, np.int64).reshape(-1, 2),
+                          parent=work_parent[w_of_in].astype(np.int32),
+                          rep=np.arange(n, dtype=np.int64))]
+    rep = rep_work
+    for i in range(1, L):
+        gi = graphs[i]
+        rep = rep[np.asarray(infos[i - 1].sun_pos_index)]
+        parent = (np.asarray(infos[i].parent_coarse)[: gi.n].astype(np.int32)
+                  if i < L - 1 else None)
+        levels.append(LevelExport(n=gi.n, edges=unique_edges(gi),
+                                  parent=parent, rep=rep.astype(np.int64)))
+    return HierarchyExport(levels=levels, pos=np.asarray(pos_full, np.float32))
+
+
+def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
+                     *, export: bool = False):
+    """Multi-GiLA on one connected component; returns positions [n,2] (and,
+    with ``export=True``, the HierarchyExport the serving layer consumes)."""
     stats = LayoutStats()
+
+    def ret(pos, stats, graphs=None, infos=None, pr=None):
+        if not export:
+            return pos, stats
+        exp = (_build_export(edges, n, pr, graphs, infos, pos)
+               if graphs is not None else _single_level_export(edges, n, pos))
+        return pos, stats, exp
+
     if n == 1:
-        return np.zeros((1, 2), np.float32), stats
+        return ret(np.zeros((1, 2), np.float32), stats)
     if cfg.prune and cfg.engine != "flat":
         pr = prune_degree_one(edges, n)
     else:
@@ -138,7 +219,7 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig
         # star graphs collapse entirely under pruning: lay out leaves only
         pos = reinsert(pr, np.zeros((max(work_n, 1), 2), np.float32), work_edges) \
             if pr is not None else np.zeros((n, 2), np.float32)
-        return pos, stats
+        return ret(pos, stats)
     g0 = build_graph(work_edges, work_n, mass=mass)
 
     if cfg.engine == "flat":
@@ -152,7 +233,7 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig
         pos = _layout_one_level(g0, pos, sched, cfg, cfg.seed)
         stats.levels = 1
         stats.level_sizes = ((g0.n, g0.m),)
-        return np.asarray(pos)[:n], stats
+        return ret(np.asarray(pos)[:n], stats)
 
     graphs, infos = build_hierarchy(g0, cfg)
     L = len(graphs)
@@ -186,7 +267,8 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig
     pos = np.asarray(pos, np.float32)[: g0.n]
     if pr is not None:
         pos = reinsert(pr, pos, work_edges)
-    return pos[:n] if pr is None else pos, stats
+    pos = pos[:n] if pr is None else pos
+    return ret(pos, stats, graphs=graphs, infos=infos, pr=pr)
 
 
 def _pack_components(layouts: list[np.ndarray], pad: float = 2.0) -> np.ndarray:
@@ -212,27 +294,90 @@ def _pack_components(layouts: list[np.ndarray], pad: float = 2.0) -> np.ndarray:
     return out
 
 
+def _merge_exports(exports: list, index_maps: list, edges: np.ndarray,
+                   n: int, pos: np.ndarray) -> HierarchyExport:
+    """Merge per-component hierarchies into global zoom bands.
+
+    Band 0 keeps the ORIGINAL global vertex ids (level-0 positions are the
+    final packed drawing). Band b unions, from every component, its level
+    ``min(b, L_c-1)`` — a component whose hierarchy is shallower than b
+    keeps contributing its coarsest level with an identity parent map, so
+    every band is a complete drawing of the whole graph.
+    """
+    n_bands = max(len(e.levels) for e in exports)
+    if n_bands == 1:
+        return _single_level_export(edges, n, pos)
+
+    # per (band, component) offsets of the merged index space (band 0 is the
+    # identity on global ids, so offsets start at band 1)
+    offs = []
+    for b in range(1, n_bands):
+        sizes = [e.levels[min(b, len(e.levels) - 1)].n for e in exports]
+        offs.append(np.concatenate([[0], np.cumsum(sizes[:-1])]).astype(np.int64))
+
+    def off(b, ci):  # band-b merged index offset of component ci
+        return int(offs[b - 1][ci])
+
+    levels = []
+    # band 0: global ids, parent composed per component
+    parent0 = np.zeros(n, np.int32)
+    for ci, (e, vs) in enumerate(zip(exports, index_maps)):
+        l0 = e.levels[0]
+        # a single-level component repeats identically in band 1 → identity
+        p = (l0.parent if l0.parent is not None
+             else np.arange(l0.n, dtype=np.int32))
+        parent0[vs] = p + off(1, ci)
+    levels.append(LevelExport(n=n, edges=np.asarray(edges, np.int64),
+                              parent=parent0,
+                              rep=np.arange(n, dtype=np.int64)))
+    for b in range(1, n_bands):
+        es, reps, parents = [], [], []
+        nb = 0
+        for ci, (e, vs) in enumerate(zip(exports, index_maps)):
+            lvl = e.levels[min(b, len(e.levels) - 1)]
+            es.append(lvl.edges + off(b, ci))
+            reps.append(vs[lvl.rep])             # component-local → global id
+            if b < n_bands - 1:
+                if b + 1 < len(e.levels):
+                    parents.append(lvl.parent + off(b + 1, ci))
+                else:  # saturated: same level repeats in the next band
+                    parents.append(np.arange(lvl.n, dtype=np.int32)
+                                   + off(b + 1, ci))
+            nb += lvl.n
+        levels.append(LevelExport(
+            n=nb,
+            edges=(np.concatenate(es) if es else np.zeros((0, 2), np.int64)),
+            parent=(np.concatenate(parents).astype(np.int32)
+                    if b < n_bands - 1 else None),
+            rep=np.concatenate(reps).astype(np.int64)))
+    return HierarchyExport(levels=levels, pos=np.asarray(pos, np.float32))
+
+
 def multigila_layout(edges: np.ndarray, n: int,
-                     cfg: LayoutConfig | None = None
-                     ) -> tuple[np.ndarray, LayoutStats]:
-    """Full pipeline on a possibly-disconnected graph. Returns pos[n,2]."""
+                     cfg: LayoutConfig | None = None, *,
+                     export: bool = False):
+    """Full pipeline on a possibly-disconnected graph. Returns pos[n,2] (and
+    the merged HierarchyExport when ``export=True`` — the serving layer's
+    input, see serve/tiles.py)."""
     cfg = cfg or LayoutConfig()
     edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
     labels = connected_components(edges, n)
     comps = np.unique(labels)
     stats = LayoutStats()
     if len(comps) == 1:
-        pos, stats = layout_component(edges, n, cfg)
-        return pos, stats
+        return layout_component(edges, n, cfg, export=export)
 
-    layouts, index_maps = [], []
+    layouts, index_maps, exports = [], [], []
     for c in comps:
         vs = np.nonzero(labels == c)[0]
         remap = np.full(n, -1, np.int64)
         remap[vs] = np.arange(vs.size)
         emask = labels[edges[:, 0]] == c
         ce = np.stack([remap[edges[emask, 0]], remap[edges[emask, 1]]], 1)
-        p, s = layout_component(ce, vs.size, cfg)
+        out = layout_component(ce, vs.size, cfg, export=export)
+        p, s = out[0], out[1]
+        if export:
+            exports.append(out[2])
         stats.levels = max(stats.levels, s.levels)
         layouts.append(np.asarray(p))
         index_maps.append(vs)
@@ -240,4 +385,6 @@ def multigila_layout(edges: np.ndarray, n: int,
     pos = np.zeros((n, 2), np.float32)
     for vs, P in zip(index_maps, packed):
         pos[vs] = P
-    return pos, stats
+    if not export:
+        return pos, stats
+    return pos, stats, _merge_exports(exports, index_maps, edges, n, pos)

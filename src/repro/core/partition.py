@@ -9,6 +9,8 @@ the halo-exchange variant of the distributed supersteps).
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +18,6 @@ import numpy as np
 from repro.graphs.graph import PaddedGraph, edge_gather
 
 
-@jax.jit
 def _propagate(g: PaddedGraph, labels: jnp.ndarray, loads: jnp.ndarray,
                key: jnp.ndarray, capacity: jnp.ndarray):
     """One Spinner superstep: each vertex scores every label by neighbor
@@ -36,6 +37,22 @@ def _propagate(g: PaddedGraph, labels: jnp.ndarray, loads: jnp.ndarray,
     return new, new_loads.astype(jnp.float32)
 
 
+@partial(jax.jit, static_argnames=("iters",))
+def _spin(g: PaddedGraph, labels: jnp.ndarray, loads: jnp.ndarray,
+          capacity: jnp.ndarray, key: jnp.ndarray, iters: int):
+    """All ``iters`` supersteps rolled into one ``lax.scan`` program — the
+    host dispatches once per partitioning call instead of once per
+    superstep. Per-step randomness comes from pre-split keys (deterministic
+    in ``seed``, though a different stream than the old per-step loop)."""
+    def body(carry, k):
+        labels, loads = carry
+        return _propagate(g, labels, loads, k, capacity), None
+
+    keys = jax.random.split(key, iters)
+    (labels, _), _ = jax.lax.scan(body, (labels, loads), keys)
+    return labels
+
+
 def spinner_partition(g: PaddedGraph, n_parts: int, *, iters: int = 32,
                       slack: float = 1.10, seed: int = 0) -> np.ndarray:
     """Return int32[n_pad] partition labels (balanced within ``slack``)."""
@@ -46,11 +63,8 @@ def spinner_partition(g: PaddedGraph, n_parts: int, *, iters: int = 32,
     capacity = jnp.asarray(slack * max(g.n, 1) / n_parts, jnp.float32)
     loads = jnp.bincount(jnp.where(g.vmask, labels, n_parts),
                          length=n_parts + 1)[:n_parts].astype(jnp.float32)
-    key = jax.random.PRNGKey(seed)
-    for _ in range(iters):
-        key, sub = jax.random.split(key)
-        labels, loads = _propagate(g, labels, loads, sub, capacity)
-    return np.asarray(labels)
+    return np.asarray(_spin(g, labels, loads, capacity,
+                            jax.random.PRNGKey(seed), iters))
 
 
 def edge_cut(g: PaddedGraph, labels: np.ndarray) -> float:

@@ -86,6 +86,16 @@ def choose_grid(n: int, *, avg_occupancy: int = 12,
     return G, max(cap, 1)
 
 
+def grid_cell_size(lo, hi, grid_dim: int, xp=jnp):
+    """Canonical G×G cell size over box (lo, hi): ``max(hi-lo, 1e-6)/G``
+    in f32. Every consumer that must agree bit-for-bit on which cell/tile
+    a point lands in (``bin_vertices``, ``cell_centers_from_box``, the
+    serving layer's tile binning and viewport cover — serve/tiles.py,
+    serve/query.py) derives the cell size HERE, with ``xp`` numpy or
+    jax.numpy, instead of re-implementing the formula."""
+    return xp.maximum(hi - lo, xp.float32(1e-6)) / xp.float32(grid_dim)
+
+
 def _neighbor_table(G: int) -> np.ndarray:
     """[G²+1, 9] cell ids of each cell's 3×3 neighborhood (incl. itself);
     out-of-range neighbors and the sentinel row point at cell G²."""
@@ -102,19 +112,29 @@ def _neighbor_table(G: int) -> np.ndarray:
     return np.concatenate([table, np.full((1, 9), nc, np.int32)], axis=0)
 
 
-def bin_vertices(pos, vmask, grid_dim: int, cell_cap: int):
+def bin_vertices(pos, vmask, grid_dim: int, cell_cap: int, *, box=None):
     """Bucket vertices into a G×G grid over their bounding box.
 
     Returns (cid[n] int32 with sentinel G², bucket[G²+1, cap] int32 with
     sentinel n, inb[n] bool — vertex made it into its cell's bucket).
+
+    ``box`` optionally fixes the binning box to ``(lo[2], hi[2])`` instead of
+    the vertices' own bounding box — the serving tile pyramid
+    (serve/tiles.py) bins every zoom band against the same global box so
+    tile keys align across bands. Bucket slot order is the vertices' array
+    order (the argsort is stable), which is how the pyramid builder turns
+    the slots into a top-k: it presents vertices sorted by descending mass.
     """
     n = pos.shape[0]
     G, cap = grid_dim, cell_cap
     nc = G * G
-    big = jnp.float32(3e38)
-    lo = jnp.min(jnp.where(vmask[:, None], pos, big), axis=0)
-    hi = jnp.max(jnp.where(vmask[:, None], pos, -big), axis=0)
-    cell = jnp.maximum(hi - lo, 1e-6) / G
+    if box is None:
+        big = jnp.float32(3e38)
+        lo = jnp.min(jnp.where(vmask[:, None], pos, big), axis=0)
+        hi = jnp.max(jnp.where(vmask[:, None], pos, -big), axis=0)
+    else:
+        lo, hi = box
+    cell = grid_cell_size(lo, hi, G)
     ij = jnp.clip(jnp.floor((pos - lo) / cell), 0, G - 1).astype(jnp.int32)
     cid = jnp.where(vmask, ij[:, 1] * G + ij[:, 0], nc).astype(jnp.int32)
 
@@ -199,7 +219,7 @@ def cell_centers_from_box(lo, hi, grid_dim: int):
     sharded SPMD body (which derives lo/hi by pmin/pmax) so the centered
     second moments stay bit-identical across the two paths."""
     G = grid_dim
-    cell = jnp.maximum(hi - lo, 1e-6) / G
+    cell = grid_cell_size(lo, hi, G)
     ids = jnp.arange(G * G)
     xy = jnp.stack([ids % G, ids // G], axis=1).astype(jnp.float32)
     ctr = lo[None, :] + (xy + 0.5) * cell[None, :]

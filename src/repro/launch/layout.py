@@ -36,10 +36,8 @@ def main(argv=None):
     ap.add_argument("--no-cre", action="store_true")
     args = ap.parse_args(argv)
 
-    gen = getattr(generators, args.graph)
-    gargs = [int(a) if float(a).is_integer() else a for a in args.args]
-    edges, n = gen(*gargs)
-    print(f"graph {args.graph}{tuple(gargs)}: n={n} m={len(edges)}")
+    edges, n, gargs = generators.from_cli(args.graph, args.args)
+    print(f"graph {args.graph}{gargs}: n={n} m={len(edges)}")
 
     mesh_shape = (tuple(int(s) for s in args.mesh.split("x"))
                   if args.mesh else None)

@@ -1,0 +1,117 @@
+"""Micro-batching front door for viewport queries (DESIGN.md §6).
+
+Concurrent callers submit single viewports; a collector thread coalesces
+everything that arrives within a deadline window (or up to ``max_batch``)
+into ONE batched device program — the same batched-prefill structure as
+``examples/serve_decode.py``, applied to query serving. Under load the
+window fills and per-request cost amortizes toward the batched
+throughput; an idle request pays at most the window.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.serve.query import QueryEngine, trim_result
+
+
+class MicroBatcher:
+    """Deadline-window request coalescing in front of a QueryEngine."""
+
+    def __init__(self, engine: QueryEngine, *, max_batch: int = 64,
+                 window_s: float = 0.002, trim: bool = True):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.window_s = window_s
+        self.trim = trim
+        self.batches = 0
+        self.requests = 0
+        self._q: queue.Queue = queue.Queue()
+        self._closed = False
+        # orders every put against close(): nothing can slip into the queue
+        # after the shutdown sentinel, so no future is left unresolved
+        self._lock = threading.Lock()
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    def submit(self, box, zoom: int) -> Future:
+        """Enqueue one viewport; resolves to the (trimmed) query result."""
+        fut: Future = Future()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            self._q.put((np.asarray(box, np.float32).reshape(4), int(zoom),
+                         fut))
+        return fut
+
+    def _collect(self) -> list | None:
+        """Block for the first request, then drain until deadline/max."""
+        item = self._q.get()
+        if item is None:
+            return None
+        batch = [item]
+        deadline = time.monotonic() + self.window_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                nxt = self._q.get(timeout=remaining)
+            except queue.Empty:
+                break
+            if nxt is None:
+                self._q.put(None)   # re-arm shutdown for the outer loop
+                break
+            batch.append(nxt)
+        return batch
+
+    def _run(self):
+        while True:
+            batch = self._collect()
+            if batch is None:
+                break
+            # claim each future; a caller may have cancelled while queued
+            # (timeout wrappers) — completing a cancelled future would raise
+            # InvalidStateError and kill this thread
+            batch = [item for item in batch
+                     if item[2].set_running_or_notify_cancel()]
+            if not batch:
+                continue
+            boxes = np.stack([b for b, _, _ in batch])
+            zooms = np.asarray([z for _, z, _ in batch], np.int32)
+            self.batches += 1
+            self.requests += len(batch)
+            try:
+                out = self.engine.query(boxes, zooms)
+            except Exception as e:
+                for _, _, fut in batch:
+                    fut.set_exception(e)
+                continue
+            for i, (_, _, fut) in enumerate(batch):
+                fut.set_result(trim_result(out, i) if self.trim
+                               else {k: v[i] for k, v in out.items()})
+        self._drain()
+
+    def _drain(self):
+        """Cancel whatever is still queued once nobody will serve it
+        (requests racing close() must not block their callers forever)."""
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                return
+            if item is not None:
+                item[2].cancel()
+
+    def close(self):
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._q.put(None)   # under the lock: nothing enqueues after it
+        self._worker.join(timeout=30)
+        self._drain()   # anything the worker left when the sentinel hit

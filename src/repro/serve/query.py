@@ -1,0 +1,248 @@
+"""Batched LOD viewport queries — the serving hot path (DESIGN.md §6).
+
+One jitted device program answers B viewports at once (the BatchLayout
+move applied to query time): per request, select the zoom band, enumerate
+the covered quadtree tiles (row-major, a static ``max_tiles`` budget),
+gather the tiles' dense vertex/edge tables, and mask. Every band is
+evaluated for the whole batch and the per-request winner is selected with
+``where`` — bands are few (hierarchy depth) and the per-band work is a
+handful of gathers, so uniform compute beats host-side re-batching by
+band.
+
+Everything after band selection is gathers and comparisons — no float
+arithmetic touches the stored coordinates — so the batched results are
+bit-identical to the unpadded NumPy reference resolver
+(``reference_resolve``), which tests/test_serve.py asserts for every
+request in a batch.
+
+Zoom semantics: a request's ``zoom`` z asks for quadtree tiles of zoom z;
+the resolver serves it from the coarsest band whose tile grid is at least
+that fine (``band_for_zoom``), i.e. coarse summaries for zoomed-out
+viewports, full detail only when the viewport is small.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.serve.tiles import TilePyramid, tile_coords
+
+MAX_TILES = 16  # static per-request tile-cover budget (row-major truncation;
+# the result's "covered" field carries the true wx·wy so clients can tell)
+
+
+def band_for_zoom(zooms: np.ndarray, z) -> np.ndarray:
+    """Coarsest band whose zoom ≥ z (band 0 if z exceeds the finest)."""
+    zs = np.asarray(zooms)
+    z = np.asarray(z)
+    return np.clip(np.sum(zs[None, ...] >= z[..., None], axis=-1) - 1,
+                   0, len(zs) - 1).astype(np.int32)
+
+
+def _cover(boxes, lo, hi, zoom: int, max_tiles: int):
+    """Row-major tile cover of each viewport, truncated to ``max_tiles``.
+
+    boxes f32[B, 4] → (tid i32[B, K], tvalid bool[B, K], covered i32[B] =
+    the untruncated wx·wy); the valid tiles are a prefix (k < wx·wy).
+    Tile math is the shared ``tile_coords`` (bit-identical to binning).
+    """
+    G = 1 << zoom
+    t0 = tile_coords(boxes[:, 0:2], lo, hi, zoom, xp=jnp)
+    t1 = tile_coords(boxes[:, 2:4], lo, hi, zoom, xp=jnp)
+    w = jnp.maximum(t1 - t0 + 1, 1)                     # [B, 2] (≥1 even for
+    # an inverted box, keeping the k % w enumeration well-defined)
+    k = jnp.arange(max_tiles, dtype=jnp.int32)[None, :]  # [1, K]
+    kx = k % w[:, 0:1]
+    ky = k // w[:, 0:1]
+    tvalid = ky < w[:, 1:2]
+    tid = jnp.where(tvalid, (t0[:, 1:2] + ky) * G + (t0[:, 0:1] + kx), 0)
+    return tid, tvalid, w[:, 0] * w[:, 1]
+
+
+def _query_band(band_arrays, zoom: int, lo, hi, boxes, max_tiles: int):
+    """Resolve ALL requests against one band's dense tables."""
+    tid, tvalid, covered = _cover(boxes, lo, hi, zoom, max_tiles)
+    B = boxes.shape[0]
+
+    vt = band_arrays["tile_vid"][tid]                    # [B, K, cap]
+    vmask = (vt >= 0) & tvalid[:, :, None]
+    rep = jnp.where(vmask, band_arrays["tile_rep"][tid], -1)
+    vpos = jnp.where(vmask[..., None], band_arrays["tile_pos"][tid], 0.0)
+    vmass = jnp.where(vmask, band_arrays["tile_mass"][tid], 0.0)
+    vid = jnp.where(vmask, vt, -1)
+    inside = (vmask
+              & (vpos[..., 0] >= boxes[:, None, None, 0])
+              & (vpos[..., 1] >= boxes[:, None, None, 1])
+              & (vpos[..., 0] <= boxes[:, None, None, 2])
+              & (vpos[..., 1] <= boxes[:, None, None, 3]))
+
+    et = band_arrays["tile_eid"][tid]                    # [B, K, ecap]
+    emask = (et >= 0) & tvalid[:, :, None]
+    eid = jnp.where(emask, et, -1)
+    epos = jnp.where(emask[..., None], band_arrays["tile_epos"][tid], 0.0)
+
+    flat = lambda a: a.reshape((B, -1) + a.shape[3:])
+    return {"vid": flat(vid), "rep": flat(rep), "vpos": flat(vpos),
+            "vmass": flat(vmass), "vmask": flat(vmask),
+            "inside": flat(inside), "eid": flat(eid), "epos": flat(epos),
+            "emask": flat(emask),
+            "tiles": jnp.where(tvalid, tid, -1),
+            "covered": covered}
+
+
+@functools.partial(jax.jit, static_argnames=("zooms", "max_tiles"))
+def _query_batch(bands, zooms: tuple, lo, hi, boxes, req_zoom,
+                 max_tiles: int = MAX_TILES):
+    """boxes f32[B, 4], req_zoom i32[B] → per-request padded slices.
+
+    ``bands`` is a tuple of dense per-band array dicts (uniform caps);
+    ``zooms`` the static per-band quadtree zooms.
+    """
+    zs = jnp.asarray(zooms, jnp.int32)
+    sel = jnp.clip(jnp.sum(zs[None, :] >= req_zoom[:, None], axis=1) - 1,
+                   0, len(zooms) - 1)
+    out = None
+    for b, band in enumerate(bands):
+        res = _query_band(band, zooms[b], lo, hi, boxes, max_tiles)
+        if out is None:
+            out = res
+        else:
+            pick = sel == b
+            out = {k: jnp.where(pick.reshape((-1,) + (1,) * (v.ndim - 1)),
+                                v, out[k])
+                   for k, v in res.items()}
+    out["band"] = sel.astype(jnp.int32)
+    return out
+
+
+class QueryEngine:
+    """Device-resident pyramid + jitted batched resolver.
+
+    Batch sizes are padded to power-of-two buckets so the number of
+    compiled programs stays logarithmic in the largest batch.
+    """
+
+    def __init__(self, pyramid: TilePyramid, max_tiles: int = MAX_TILES):
+        self.zooms = tuple(int(b.zoom) for b in pyramid.bands)
+        self.lo = jnp.asarray(pyramid.lo, jnp.float32)
+        self.hi = jnp.asarray(pyramid.hi, jnp.float32)
+        self.max_tiles = max_tiles
+        self.bands = tuple(
+            {"tile_vid": jnp.asarray(b.tile_vid),
+             "tile_rep": jnp.asarray(b.tile_rep),
+             "tile_pos": jnp.asarray(b.tile_pos),
+             "tile_mass": jnp.asarray(b.tile_mass),
+             "tile_eid": jnp.asarray(b.tile_eid),
+             "tile_epos": jnp.asarray(b.tile_epos)}
+            for b in pyramid.bands)
+
+    @staticmethod
+    def _bucket(b: int) -> int:
+        return 1 << max(b - 1, 0).bit_length()
+
+    def query(self, boxes: np.ndarray, req_zoom: np.ndarray) -> dict:
+        """Resolve B viewports; returns host arrays trimmed to B rows."""
+        boxes = np.asarray(boxes, np.float32).reshape(-1, 4)
+        req_zoom = np.asarray(req_zoom, np.int32).reshape(-1)
+        B = boxes.shape[0]
+        Bp = self._bucket(B)
+        if Bp != B:
+            boxes = np.concatenate(
+                [boxes, np.zeros((Bp - B, 4), np.float32)], axis=0)
+            req_zoom = np.concatenate(
+                [req_zoom, np.zeros(Bp - B, np.int32)])
+        out = _query_batch(self.bands, self.zooms, self.lo, self.hi,
+                           jnp.asarray(boxes), jnp.asarray(req_zoom),
+                           self.max_tiles)
+        return {k: np.asarray(v)[:B] for k, v in out.items()}
+
+    def warmup(self, batch_sizes=(1, 16, 64)) -> None:
+        for B in batch_sizes:
+            self.query(np.zeros((B, 4), np.float32), np.zeros(B, np.int32))
+
+
+def trim_result(out: dict, i: int) -> dict:
+    """Drop padding from request i of a batched result → unpadded arrays
+    (the reference resolver's format)."""
+    vm = out["vmask"][i]
+    em = out["emask"][i]
+    return {"band": int(out["band"][i]),
+            "covered": int(out["covered"][i]),
+            "vid": out["vid"][i][vm], "rep": out["rep"][i][vm],
+            "vpos": out["vpos"][i][vm], "vmass": out["vmass"][i][vm],
+            "inside": out["inside"][i][vm],
+            "eid": out["eid"][i][em], "epos": out["epos"][i][em],
+            "tiles": out["tiles"][i][out["tiles"][i] >= 0]}
+
+
+def random_viewports(lo, hi, zoom_max: int, count: int, seed: int = 0
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Uniform load-generator workload: ``count`` (box, zoom) requests.
+
+    Zooms are uniform over [0, zoom_max]; a zoom-z box spans 1/2^z of the
+    pyramid extent at a uniform position — the mix a map-style client
+    panning and zooming over the drawing produces.
+    """
+    rng = np.random.default_rng(seed)
+    lo = np.asarray(lo, np.float32)
+    hi = np.asarray(hi, np.float32)
+    z = rng.integers(0, zoom_max + 1, count).astype(np.int32)
+    ext = hi - lo
+    w = ext[None, :] / (2.0 ** z)[:, None].astype(np.float32)
+    c = lo[None, :] + (rng.random((count, 2)).astype(np.float32)
+                       * np.maximum(ext[None, :] - w, 0.0))
+    return np.concatenate([c, c + w], axis=1).astype(np.float32), z
+
+
+def reference_resolve(pyr: TilePyramid, box, zoom: int,
+                      max_tiles: int = MAX_TILES) -> dict:
+    """Unpadded single-request NumPy resolver — the parity oracle.
+
+    Mirrors the batched path operation for operation (same f32 tile math,
+    same row-major truncation, same slot order) so results are
+    bit-identical, not just approximately equal.
+    """
+    zs = np.asarray([b.zoom for b in pyr.bands])
+    sel = int(band_for_zoom(zs, np.asarray([zoom]))[0])
+    band = pyr.bands[sel]
+    G = 1 << band.zoom
+    box = np.asarray(box, np.float32).reshape(4)
+    lo = np.asarray(pyr.lo, np.float32)
+    hi = np.asarray(pyr.hi, np.float32)
+    t0 = tile_coords(box[0:2], lo, hi, band.zoom)
+    t1 = tile_coords(box[2:4], lo, hi, band.zoom)
+    wx, wy = max(int(t1[0] - t0[0] + 1), 1), max(int(t1[1] - t0[1] + 1), 1)
+    tids = []
+    for k in range(max_tiles):
+        kx, ky = k % wx, k // wx
+        if ky >= wy:
+            break
+        tids.append(int((int(t0[1]) + ky) * G + (int(t0[0]) + kx)))
+
+    vids, reps, vposs, vmasss, eids, eposs = [], [], [], [], [], []
+    for t in tids:
+        vm = band.tile_vid[t] >= 0
+        vids.append(band.tile_vid[t][vm])
+        reps.append(band.tile_rep[t][vm])
+        vposs.append(band.tile_pos[t][vm])
+        vmasss.append(band.tile_mass[t][vm])
+        em = band.tile_eid[t] >= 0
+        eids.append(band.tile_eid[t][em])
+        eposs.append(band.tile_epos[t][em])
+    cat = lambda xs, w: (np.concatenate(xs) if xs
+                         else np.zeros((0,) + w, np.float32))
+    vpos = cat(vposs, (2,))
+    inside = ((vpos[:, 0] >= box[0]) & (vpos[:, 1] >= box[1])
+              & (vpos[:, 0] <= box[2]) & (vpos[:, 1] <= box[3]))
+    return {"band": sel,
+            "covered": wx * wy,
+            "vid": cat(vids, ()).astype(np.int32),
+            "rep": cat(reps, ()).astype(np.int32),
+            "vpos": vpos, "vmass": cat(vmasss, ()),
+            "inside": inside,
+            "eid": cat(eids, ()).astype(np.int32),
+            "epos": cat(eposs, (4,)),
+            "tiles": np.asarray(tids, np.int32)}

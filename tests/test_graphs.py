@@ -70,6 +70,62 @@ def test_crossings_match_bruteforce():
     assert M.count_crossings(pos, e) == brute(pos, e)
 
 
+def test_load_edgelist_streaming(tmp_path):
+    from repro.graphs.io import load_edgelist, save_edgelist
+    # comments (# and %), blank lines, a trailing weight column
+    p = tmp_path / "a.txt"
+    p.write_text("# c\n0 1\n\n% c2\n1 2\n2 3 0.5\n")
+    e, n = load_edgelist(str(p))
+    assert e.tolist() == [[0, 1], [1, 2], [2, 3]] and n == 4
+    # MatrixMarket: banner + size line + 1-based indices; n from the header
+    p2 = tmp_path / "b.mtx"
+    p2.write_text("%%MatrixMarket matrix coordinate pattern symmetric\n"
+                  "% comment\n7 7 3\n1 2\n2 3\n4 5\n")
+    e2, n2 = load_edgelist(str(p2))
+    assert e2.tolist() == [[0, 1], [1, 2], [3, 4]] and n2 == 7
+    # empty file: no warnings, empty result
+    p3 = tmp_path / "c.txt"
+    p3.write_text("")
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        e3, n3 = load_edgelist(str(p3))
+    assert e3.shape == (0, 2) and n3 == 0
+    # save → load round trip
+    p4 = tmp_path / "d.txt"
+    rng = np.random.default_rng(0)
+    ed = rng.integers(0, 500, (2000, 2))
+    save_edgelist(str(p4), ed)
+    e4, _ = load_edgelist(str(p4))
+    assert np.array_equal(e4, ed)
+    # flat one-number-per-line files pair consecutive values (old
+    # loadtxt(...).reshape(-1, 2) contract)
+    p5 = tmp_path / "flat.txt"
+    p5.write_text("0\n1\n1\n2\n")
+    e5, n5 = load_edgelist(str(p5))
+    assert e5.tolist() == [[0, 1], [1, 2]] and n5 == 3
+
+
+def test_save_svg_edge_cap(tmp_path):
+    from repro.graphs.io import save_svg
+    rng = np.random.default_rng(1)
+    pos = rng.random((40, 2)).astype(np.float32)
+    edges = rng.integers(0, 40, (400, 2))
+    p = tmp_path / "capped.svg"
+    save_svg(str(p), pos, edges, max_edges=64)
+    txt = p.read_text()
+    assert "edge cap: drew" in txt
+    assert txt.count("<line") <= 64
+    # deterministic: same input → same bytes
+    p2 = tmp_path / "capped2.svg"
+    save_svg(str(p2), pos, edges, max_edges=64)
+    assert p2.read_text() == txt
+    # below the cap no note appears
+    p3 = tmp_path / "uncapped.svg"
+    save_svg(str(p3), pos, edges[:10], max_edges=64)
+    assert "edge cap" not in p3.read_text()
+
+
 def test_bfs_distances_match_networkx():
     import networkx as nx
     e, n = G.scale_free(60, 2, 4)

@@ -82,6 +82,39 @@ def test_placer_puts_suns_at_coarse_positions():
         assert np.linalg.norm(pos[v] - sun_pos) < 12.0
 
 
+def test_placer_scatter_fallback_radius():
+    """Members with NO inter-system link scatter around their sun at a
+    radius proportional to their depth (solar_placer's fallback branch)."""
+    from repro.core.solar_merger import LevelInfo
+    # two path systems joined only sun-to-sun: members 1,2 and 4,5 have no
+    # cross-system edges, so none of them receives a barycentric suggestion
+    e = np.array([[0, 1], [1, 2], [3, 4], [4, 5], [0, 3]])
+    n = 6
+    g = build_graph(e, n)
+    n_pad = g.n_pad
+    state = np.zeros(n_pad, np.int32)
+    state[:n] = [1, 2, 3, 1, 2, 3]          # SUN, PLANET, MOON × 2
+    sun_of = np.full(n_pad, n_pad, np.int32)
+    sun_of[:n] = [0, 0, 0, 3, 3, 3]
+    depth = np.zeros(n_pad, np.int32)
+    depth[:n] = [0, 1, 2, 0, 1, 2]
+    parent_coarse = np.full(n_pad, -1, np.int32)
+    parent_coarse[:n] = [0, 0, 0, 1, 1, 1]
+    info = LevelInfo(parent_coarse=parent_coarse, sun_of=sun_of, depth=depth,
+                     state=state, sun_pos_index=np.array([0, 3], np.int32))
+    coarse_pos = np.array([[0.0, 0.0], [10.0, 0.0]], np.float32)
+    scatter = 0.7
+    pos = np.asarray(solar_placer(g, info, coarse_pos, seed=0,
+                                  scatter_scale=scatter))
+    for v, sun, d in [(1, 0, 1), (2, 0, 2), (4, 3, 1), (5, 3, 2)]:
+        r = np.linalg.norm(pos[v] - coarse_pos[parent_coarse[sun]])
+        np.testing.assert_allclose(r, scatter * d, atol=1e-5,
+                                   err_msg=f"vertex {v}")
+    # suns sit exactly at their coarse positions
+    np.testing.assert_allclose(pos[0], coarse_pos[0], atol=1e-6)
+    np.testing.assert_allclose(pos[3], coarse_pos[1], atol=1e-6)
+
+
 def test_centralized_baseline_runs():
     e, n = G.grid(8, 8)
     pos, stats = multigila_layout(e, n, LayoutConfig(engine="centralized",
