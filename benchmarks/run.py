@@ -17,10 +17,11 @@ def main(argv=None) -> None:
     ap.add_argument("--small", action="store_true",
                     help="CI-sized instances")
     ap.add_argument("--only", default="",
-                    help="comma list: table1,fig5,table3,kernels,serve")
+                    help="comma list: table1,fig5,table3,kernels,serve,"
+                         "pipeline")
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else {
-        "table1", "fig5", "table3", "kernels", "serve"}
+        "table1", "fig5", "table3", "kernels", "serve", "pipeline"}
 
     csv = []
     if "table1" in want:
@@ -45,6 +46,17 @@ def main(argv=None) -> None:
         print("== Serving: batched viewport-query throughput ==", flush=True)
         from benchmarks import serve_bench as sb
         csv += sb.csv_rows(sb.run(small=args.small))
+    if "pipeline" in want:
+        print("== Pipeline: end-to-end multilevel driver, bucketed vs "
+              "exact-shape compilation ==", flush=True)
+        kind = "smoke" if args.small else "small"
+        # the full-size pipeline suite (n up to 20k × 3 passes) is a
+        # standalone run: python -m benchmarks.pipeline_bench
+        print(f"[pipeline] running the '{kind}' suite here; use "
+              "benchmarks.pipeline_bench directly for the full suite",
+              flush=True)
+        from benchmarks import pipeline_bench as pb
+        csv += pb.csv_rows(pb.run(kind))
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv:

@@ -1,0 +1,213 @@
+"""Shape buckets + process-wide compile cache for the multilevel driver.
+
+The paper's headline number is END-TO-END wall clock (10M edges in ~60
+minutes on commodity cloud machines), and at that scale the coarsen →
+place → refine *driver* — not the force kernel — dominates time-to-layout.
+Before this module, every hierarchy level paid a fresh XLA compile: each
+level has a distinct (n, m), ``PaddedGraph`` carries them as static pytree
+fields, and ``gila_layout`` additionally bakes the iteration count into the
+trace. A 10-level hierarchy compiled ten programs; the next graph compiled
+ten more.
+
+The fix has three parts (DESIGN.md §8):
+
+  1. *Pow2 shape buckets* — every level's ``PaddedGraph`` is padded (vertex
+     and edge axes independently) to the next power-of-two bucket
+     (``graphs.graph.bucket_pad``), so all levels of all hierarchies share
+     O(log n_max) distinct shapes. Randomness is per-vertex
+     (``utils/prng.py``), so re-padding is behavior-preserving.
+  2. *Process-wide compile cache* — the per-level refinement runs through
+     one cached jitted step per key ``(bucket_n, bucket_e, cap, mode,
+     grid_dim, cell_cap)`` (plus the mesh for the dist engine). The static
+     ``n``/``m`` fields are normalized away before tracing
+     (``shape_normalized``), iteration count / temperature / cooling are
+     traced scalars, and the schedule picks grid_dim/cell_cap from the
+     bucket — so a fresh graph whose levels land in warm buckets triggers
+     ZERO new compiles (asserted in tests/test_bucketing.py).
+  3. *Buffer donation* — the position buffer is donated through the
+     refinement loop (no copy per level / per distributed iteration on
+     accelerators; donation is skipped on CPU where XLA does not implement
+     it and only warns).
+
+``PHASES`` collects the per-phase wall clock (coarsen / place / refine /
+compile) that benchmarks/pipeline_bench.py reports.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.graph import PaddedGraph, bucket_pad
+from repro.core import gila
+
+
+def shape_normalized(g: PaddedGraph) -> PaddedGraph:
+    """Zero the static n/m fields: jitted consumers that never read them
+    then cache on the padded shapes alone (one trace per shape bucket)."""
+    return dataclasses.replace(g, n=0, m=0)
+
+
+def donate_argnums_if_supported(*argnums: int) -> tuple:
+    """Buffer donation is a no-op (plus a warning per call) on CPU."""
+    return argnums if jax.default_backend() != "cpu" else ()
+
+
+# -- per-phase wall-clock accounting ------------------------------------------
+
+class PhaseTimes:
+    """Accumulates wall-clock per pipeline phase (coarsen/place/refine/
+    compile). ``compile`` is the first call into a cold cache entry — trace
+    + XLA compile + the first execution (inseparable under jit dispatch);
+    merger-superstep compiles land in ``coarsen`` the same way."""
+
+    def __init__(self):
+        self.t: dict[str, float] = {}
+
+    def add(self, name: str, seconds: float) -> None:
+        self.t[name] = self.t.get(name, 0.0) + seconds
+
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.add(name, time.perf_counter() - t0)
+
+    def snapshot(self) -> dict:
+        return dict(self.t)
+
+    def reset(self) -> None:
+        self.t.clear()
+
+
+PHASES = PhaseTimes()
+
+
+# -- the compile cache ---------------------------------------------------------
+
+class CompileCache:
+    """Process-wide cache of jitted step functions keyed on shape buckets.
+
+    ``get(key, builder)`` returns ``(fn, fresh)``; ``fresh=True`` means the
+    builder ran (the next call of ``fn`` traces and XLA-compiles)."""
+
+    def __init__(self):
+        self.entries: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, builder):
+        fn = self.entries.get(key)
+        if fn is not None:
+            self.hits += 1
+            return fn, False
+        self.misses += 1
+        fn = builder()
+        self.entries[key] = fn
+        return fn, True
+
+    def clear(self) -> None:
+        self.entries.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+STEP_CACHE = CompileCache()
+
+
+def cache_stats() -> dict:
+    """Introspection for tests/benchmarks: entries/hits/misses of the step
+    cache plus the total jit-trace entry count of every tracked function."""
+    return dict(entries=len(STEP_CACHE.entries), hits=STEP_CACHE.hits,
+                misses=STEP_CACHE.misses, jit_entries=jit_cache_entries())
+
+
+def jit_cache_entries() -> int:
+    """Total trace-cache entries across the driver's jitted functions —
+    the cached refine steps plus the jitted supersteps the driver calls.
+    If this number does not grow across a layout, that layout triggered
+    zero new traces (and hence zero new XLA compiles)."""
+    import importlib
+    # the package __init__ rebinds these names to functions; go through
+    # importlib to reach the modules themselves
+    _merger = importlib.import_module("repro.core.solar_merger")
+    _placer = importlib.import_module("repro.core.solar_placer")
+
+    fns = []
+    for entry in STEP_CACHE.entries.values():
+        # dist-engine entries are (jitted_step, shardings) tuples
+        fns.append(entry[0] if isinstance(entry, tuple) else entry)
+    fns += [_merger.sun_election, _merger.system_growth,
+            _placer._place, gila.gila_forces, gila.gila_layout]
+    total = 0
+    for f in fns:
+        size = getattr(f, "_cache_size", None)
+        if callable(size):
+            try:
+                total += int(size())
+            except Exception:
+                pass
+    return total
+
+
+# -- the bucketed refinement step ----------------------------------------------
+
+def _build_refine(mode: str, grid_dim: int, cell_cap: int):
+    """Jitted per-level refinement with TRACED iteration count and cooling
+    schedule: one compile covers every level (and every graph) whose arrays
+    land in the same shape bucket. The position buffer is donated."""
+
+    def refine(pos0, src, dst, vmask, emask, mass, ewt, nbr_idx, nbr_mask,
+               iters, temp0, temp_decay, params):
+        g = PaddedGraph(src=src, dst=dst, vmask=vmask, emask=emask,
+                        mass=mass, ewt=ewt, n=0, m=0)
+
+        def body(i, carry):
+            pos, temp = carry
+            pos = gila.layout_iteration(g, pos, nbr_idx, nbr_mask, params,
+                                        temp, mode=mode, grid_dim=grid_dim,
+                                        cell_cap=cell_cap)
+            return pos, temp * temp_decay
+
+        pos, _ = jax.lax.fori_loop(0, iters, body, (pos0, temp0))
+        return pos
+
+    return jax.jit(refine, donate_argnums=donate_argnums_if_supported(0))
+
+
+def refine_level(g: PaddedGraph, pos0, sched, *, ideal_len: float,
+                 rep_const: float, min_dist: float = 1e-3, seed: int = 0):
+    """Bucketed drop-in for ``gila.gila_layout`` in the multilevel driver.
+
+    Looks up (or builds) the cached step for this level's shape bucket and
+    runs it with iters/temp as traced scalars. The first call into a cold
+    entry is accounted to the ``compile`` phase, warm calls to ``refine``.
+    """
+    if sched.mode == "neighbor":
+        with PHASES.phase("refine"):        # host-side k-hop list build
+            nbr_idx, nbr_mask = gila.build_level_neighbors(
+                g, sched.k, sched.cap, seed=seed)
+    else:
+        nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
+        nbr_mask = jnp.zeros((g.n_pad, 1), bool)
+
+    key = ("refine", g.n_pad, g.m_pad, int(nbr_idx.shape[1]), sched.mode,
+           sched.grid_dim, sched.cell_cap)
+    fn, fresh = STEP_CACHE.get(
+        key, lambda: _build_refine(sched.mode, sched.grid_dim, sched.cell_cap))
+
+    params = jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32)
+    t0 = time.perf_counter()
+    pos = fn(jnp.asarray(pos0), g.src, g.dst, g.vmask, g.emask, g.mass,
+             g.ewt, nbr_idx, nbr_mask, jnp.asarray(sched.iters, jnp.int32),
+             jnp.asarray(sched.temp0, jnp.float32),
+             jnp.asarray(sched.temp_decay, jnp.float32), params)
+    pos.block_until_ready()
+    PHASES.add("compile" if fresh else "refine", time.perf_counter() - t0)
+    return pos

@@ -624,7 +624,8 @@ def layout_step_specs(n_pad: int, m_pad: int, cap: int,
 
 # -- host-side level driver (engine="multigila_dist" in core/multilevel.py) ----
 
-def partition_edges(src, dst, emask, ewt, n_pad: int, vsize: int):
+def partition_edges(src, dst, emask, ewt, n_pad: int, vsize: int,
+                    bucket: bool = False):
     """Host-side Spinner-order edge partition: group edges by the device
     block that owns their destination, pad every block to the max block
     length, and offset destinations into block-local coordinates.
@@ -632,6 +633,11 @@ def partition_edges(src, dst, emask, ewt, n_pad: int, vsize: int):
     Returns (src[m_pad2], dst_local[m_pad2], emask[m_pad2], ewt[m_pad2],
     m_pad2) laid out so ``P(VTX)`` sharding puts each device exactly its
     own destination block (padding edges: src = n_pad sentinel, mask off).
+
+    ``bucket=True`` rounds the per-device block length up to the next pow2
+    bucket: the block length is otherwise data-dependent (max in-degree
+    load), which would defeat the compiled-step cache keyed on m_pad
+    (core/bucketing.py).
     """
     src = np.asarray(src)
     dst = np.asarray(dst)
@@ -641,6 +647,9 @@ def partition_edges(src, dst, emask, ewt, n_pad: int, vsize: int):
     src, dst, ewt = src[emask], dst[emask], ewt[emask]
     owner = dst // n_loc
     m_loc = max(int(np.bincount(owner, minlength=vsize).max()), 1)
+    if bucket:
+        from repro.graphs.graph import bucket_pad
+        m_loc = bucket_pad(m_loc, minimum=64)
     S = np.full((vsize, m_loc), n_pad, np.int32)
     DL = np.zeros((vsize, m_loc), np.int32)
     EM = np.zeros((vsize, m_loc), bool)
@@ -656,9 +665,42 @@ def partition_edges(src, dst, emask, ewt, n_pad: int, vsize: int):
             vsize * m_loc)
 
 
+def _mesh_cache_key(mesh: Mesh) -> tuple:
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))
+
+
+def cached_layout_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int, *,
+                       mode: str, grid_dim: int = 0, cell_cap: int = 0):
+    """Process-wide cached (jitted step, shardings) for one shape bucket.
+
+    ``layout_train_step`` returns a FRESH shard_map + jit wrapper per call,
+    so calling it per level recompiles even for identical shapes; keying on
+    (mesh, bucket shapes, mode statics) makes the whole hierarchy — and
+    every later same-bucket graph — reuse one compiled program. The
+    position argument is donated (no per-iteration copy on accelerators).
+
+    Returns (jitted_step, shardings, fresh).
+    """
+    from repro.core import bucketing
+
+    key = ("dist_step", _mesh_cache_key(mesh), n_pad, m_pad, cap, mode,
+           grid_dim, cell_cap)
+
+    def build():
+        step, sh = layout_train_step(mesh, n_pad, m_pad, cap, mode=mode,
+                                     grid_dim=grid_dim, cell_cap=cell_cap)
+        jitted = jax.jit(
+            step, donate_argnums=bucketing.donate_argnums_if_supported(0))
+        return jitted, sh
+
+    (jitted, sh), fresh = bucketing.STEP_CACHE.get(key, build)
+    return jitted, sh, fresh
+
+
 def run_layout_level(mesh: Mesh, g, pos0, sched, *, ideal_len: float,
                      rep_const: float, min_dist: float = 1e-3,
-                     seed: int = 0) -> np.ndarray:
+                     seed: int = 0, bucket: bool = True) -> np.ndarray:
     """Lay out ONE hierarchy level with the distributed superstep.
 
     Host-side wrapper around ``layout_train_step``: re-pads the level to
@@ -667,8 +709,15 @@ def run_layout_level(mesh: Mesh, g, pos0, sched, *, ideal_len: float,
     from the replicated position table), and runs ``sched.iters`` cooling
     iterations. Returns positions [g.n_pad, 2] (numpy, padding zeroed),
     so it is a drop-in for ``gila.gila_layout`` in the multilevel driver.
+
+    With ``bucket=True`` (the driver default) the step function comes from
+    the process-wide compile cache and the edge partition is padded to a
+    pow2 block bucket, so same-bucket levels share one compiled program.
     """
+    import time
+
     from repro.core import gila
+    from repro.core.bucketing import PHASES
     from repro.graphs.graph import unique_edges
 
     VTX = vtx_axes(mesh)
@@ -685,7 +734,7 @@ def run_layout_level(mesh: Mesh, g, pos0, sched, *, ideal_len: float,
 
     src_e, dst_local, emask, ewt, m_pad = partition_edges(
         np.asarray(g.src), np.asarray(g.dst), np.asarray(g.emask),
-        np.asarray(g.ewt), n_pad, vsize)
+        np.asarray(g.ewt), n_pad, vsize, bucket=bucket)
 
     if sched.mode == "neighbor":
         cap = _round_up(sched.cap, msize)
@@ -697,10 +746,10 @@ def run_layout_level(mesh: Mesh, g, pos0, sched, *, ideal_len: float,
         cap = 1
         nbr = np.full((n_pad, 1), n_pad, np.int32)
 
-    step, sh = layout_train_step(mesh, n_pad, m_pad, cap, mode=sched.mode,
-                                 grid_dim=sched.grid_dim,
-                                 cell_cap=sched.cell_cap)
-    jitted = jax.jit(step)
+    jitted, sh, fresh = cached_layout_step(mesh, n_pad, m_pad, cap,
+                                           mode=sched.mode,
+                                           grid_dim=sched.grid_dim,
+                                           cell_cap=sched.cell_cap)
     dput = jax.device_put
     pos_d = dput(jnp.asarray(pos), sh["pos"])
     w_d = dput(jnp.asarray(w), sh["w"])
@@ -712,9 +761,16 @@ def run_layout_level(mesh: Mesh, g, pos0, sched, *, ideal_len: float,
     params = dput(jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32),
                   sh["scalar"])
     temp = sched.temp0
-    for _ in range(sched.iters):
+    t0 = time.perf_counter()
+    for it in range(sched.iters):
         pos_d = jitted(pos_d, w_d, nbr_d, src_d, dst_d, em_d, ew_d, params,
                        jnp.asarray(temp, jnp.float32))
+        if it == 0 and fresh:               # first call traces + compiles
+            pos_d.block_until_ready()
+            PHASES.add("compile", time.perf_counter() - t0)
+            t0 = time.perf_counter()
         temp *= sched.temp_decay
+    pos_d.block_until_ready()
+    PHASES.add("refine", time.perf_counter() - t0)
     out = np.asarray(pos_d)[:g.n_pad]
     return np.where(w[:g.n_pad, None] > 0, out, 0.0).astype(np.float32)

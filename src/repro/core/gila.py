@@ -178,6 +178,18 @@ def gila_forces(g: PaddedGraph, pos, nbr_idx, nbr_mask, params_arr,
     return rep + att
 
 
+def layout_iteration(g: PaddedGraph, pos, nbr_idx, nbr_mask, params_arr,
+                     temp, *, mode: str, grid_dim: int = 0, cell_cap: int = 0):
+    """One GiLA iteration: forces + cooling displacement clamp (shared by
+    ``gila_layout`` and the bucketed cached step in core/bucketing.py)."""
+    f = gila_forces(g, pos, nbr_idx, nbr_mask, params_arr, mode=mode,
+                    grid_dim=grid_dim, cell_cap=cell_cap)
+    norm = jnp.sqrt(jnp.sum(f * f, axis=1) + 1e-12)
+    step = jnp.minimum(norm, temp)
+    pos = pos + f / norm[:, None] * step[:, None]
+    return jnp.where(g.vmask[:, None], pos, 0.0)
+
+
 @partial(jax.jit, static_argnames=("mode", "iters", "grid_dim", "cell_cap"))
 def gila_layout(g: PaddedGraph, pos0, nbr_idx, nbr_mask, *, mode: str,
                 iters: int, temp0: float, temp_decay: float,
@@ -186,17 +198,18 @@ def gila_layout(g: PaddedGraph, pos0, nbr_idx, nbr_mask, *, mode: str,
     """Run ``iters`` force iterations with a cooling displacement clamp.
 
     In ``mode="grid"`` the spatial binning happens inside ``gila_forces``,
-    i.e. vertices are rebinned on every iteration of the loop."""
+    i.e. vertices are rebinned on every iteration of the loop.
+
+    This is the exact-shape path: ``iters`` (and ``g.n``/``g.m``) are
+    static, so every distinct level retraces. The multilevel driver uses
+    the bucketed, compile-cached equivalent in core/bucketing.py unless
+    ``LayoutConfig.bucketing=False``."""
     params_arr = jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32)
 
     def body(i, carry):
         pos, temp = carry
-        f = gila_forces(g, pos, nbr_idx, nbr_mask, params_arr, mode=mode,
-                        grid_dim=grid_dim, cell_cap=cell_cap)
-        norm = jnp.sqrt(jnp.sum(f * f, axis=1) + 1e-12)
-        step = jnp.minimum(norm, temp)
-        pos = pos + f / norm[:, None] * step[:, None]
-        pos = jnp.where(g.vmask[:, None], pos, 0.0)
+        pos = layout_iteration(g, pos, nbr_idx, nbr_mask, params_arr, temp,
+                               mode=mode, grid_dim=grid_dim, cell_cap=cell_cap)
         return pos, temp * temp_decay
 
     pos, _ = jax.lax.fori_loop(0, iters, body,
@@ -205,8 +218,12 @@ def gila_layout(g: PaddedGraph, pos0, nbr_idx, nbr_mask, *, mode: str,
 
 
 def random_init(g: PaddedGraph, scale: float, seed: int = 0) -> jnp.ndarray:
+    """Uniform initial positions, derived per-vertex (utils/prng.py) so the
+    draw for a real vertex does not depend on the padding bucket."""
+    from repro.utils.prng import uniform2_per_vertex
     key = jax.random.PRNGKey(seed)
-    pos = jax.random.uniform(key, (g.n_pad, 2), minval=-scale, maxval=scale)
+    ids = jnp.arange(g.n_pad, dtype=jnp.int32)
+    pos = uniform2_per_vertex(key, ids, minval=-scale, maxval=scale)
     return jnp.where(g.vmask[:, None], pos, 0.0)
 
 

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from repro.graphs.graph import PaddedGraph, build_graph, unique_edges
 from repro.core.solar_merger import run_merger, next_level, LevelInfo
 from repro.core.solar_placer import solar_placer
-from repro.core import gila
+from repro.core import gila, bucketing
+from repro.core.bucketing import PHASES
 from repro.core.schedule import make_schedule, LevelSchedule
 from repro.core.pruning import prune_degree_one, reinsert
 
@@ -48,6 +49,10 @@ class LayoutConfig:
     # multigila_dist (data, model) mesh; None → one mesh over all local devices
     mesh_shape: tuple | None = None
     prune: bool = True
+    # pow2 shape buckets + process-wide compile cache (core/bucketing.py);
+    # False = the exact-shape legacy path (retraces per level), kept for
+    # the parity test and as the pre-refactor benchmark baseline
+    bucketing: bool = True
 
 
 @dataclasses.dataclass
@@ -109,19 +114,27 @@ def connected_components(edges: np.ndarray, n: int) -> np.ndarray:
 
 def build_hierarchy(g0: PaddedGraph, cfg: LayoutConfig
                     ) -> tuple[list[PaddedGraph], list[LevelInfo]]:
-    """Coarsening loop: repeated Distributed Solar Merger applications."""
+    """Coarsening loop: repeated Distributed Solar Merger applications.
+
+    When the shrink-ratio break fires, the final merger's coarse graph AND
+    its ``LevelInfo`` are both discarded together (the placer consumes
+    ``infos[i]`` to go from ``graphs[i+1]`` back to ``graphs[i]``, so a
+    dangling info with no coarse graph would desynchronize the walk-down).
+    The returned lists always satisfy ``len(graphs) == len(infos) + 1``.
+    """
     graphs, infos = [g0], []
     g = g0
     for lvl in range(cfg.max_levels):
         if g.n <= cfg.coarsest_threshold:
             break
         st = run_merger(g, p_sun=cfg.p_sun, seed=cfg.seed + 101 * lvl)
-        cg, info = next_level(g, st)
+        cg, info = next_level(g, st, bucket=cfg.bucketing)
         if cg.n >= g.n * cfg.min_shrink or cg.n < 1:
             break
         graphs.append(cg)
         infos.append(info)
         g = cg
+    assert len(graphs) == len(infos) + 1, (len(graphs), len(infos))
     return graphs, infos
 
 
@@ -134,7 +147,14 @@ def _layout_one_level(g: PaddedGraph, pos0, sched: LevelSchedule,
                 if cfg.mesh_shape else make_host_mesh())
         return run_layout_level(mesh, g, pos0, sched,
                                 ideal_len=cfg.ideal_len,
-                                rep_const=cfg.rep_const, seed=seed)
+                                rep_const=cfg.rep_const, seed=seed,
+                                bucket=cfg.bucketing)
+    if cfg.bucketing:
+        # bucketed path: cached compiled step per shape bucket, iteration
+        # count and cooling schedule traced (core/bucketing.py)
+        return bucketing.refine_level(g, pos0, sched,
+                                      ideal_len=cfg.ideal_len,
+                                      rep_const=cfg.rep_const, seed=seed)
     if sched.mode == "neighbor":
         nbr_idx, nbr_mask = gila.build_level_neighbors(g, sched.k, sched.cap,
                                                        seed=seed)
@@ -143,11 +163,14 @@ def _layout_one_level(g: PaddedGraph, pos0, sched: LevelSchedule,
         # the iteration loop)
         nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
         nbr_mask = jnp.zeros((g.n_pad, 1), bool)
-    return gila.gila_layout(
-        g, pos0, nbr_idx, nbr_mask, mode=sched.mode, iters=sched.iters,
-        temp0=sched.temp0, temp_decay=sched.temp_decay,
-        ideal_len=cfg.ideal_len, rep_const=cfg.rep_const,
-        grid_dim=sched.grid_dim, cell_cap=sched.cell_cap)
+    with PHASES.phase("refine"):            # exact-shape path: compile
+        pos = gila.gila_layout(             # time is inseparable here
+            g, pos0, nbr_idx, nbr_mask, mode=sched.mode, iters=sched.iters,
+            temp0=sched.temp0, temp_decay=sched.temp_decay,
+            ideal_len=cfg.ideal_len, rep_const=cfg.rep_const,
+            grid_dim=sched.grid_dim, cell_cap=sched.cell_cap)
+        pos.block_until_ready()             # keep device time in-phase
+    return pos
 
 
 def _single_level_export(edges: np.ndarray, n: int, pos: np.ndarray
@@ -220,14 +243,14 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
         pos = reinsert(pr, np.zeros((max(work_n, 1), 2), np.float32), work_edges) \
             if pr is not None else np.zeros((n, 2), np.float32)
         return ret(pos, stats)
-    g0 = build_graph(work_edges, work_n, mass=mass)
+    g0 = build_graph(work_edges, work_n, mass=mass, bucket=cfg.bucketing)
 
     if cfg.engine == "flat":
         sched = make_schedule(0, 1, g0.n, g0.m,
                               exact_threshold=cfg.exact_threshold,
                               grid_threshold=cfg.grid_threshold,
                               coarsest_iters=cfg.coarsest_iters,
-                              ideal_len=cfg.ideal_len)
+                              ideal_len=cfg.ideal_len, n_pad=g0.n_pad)
         pos = gila.random_init(g0, cfg.ideal_len * max(g0.n, 4) ** 0.5,
                                cfg.seed)
         pos = _layout_one_level(g0, pos, sched, cfg, cfg.seed)
@@ -235,7 +258,8 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
         stats.level_sizes = ((g0.n, g0.m),)
         return ret(np.asarray(pos)[:n], stats)
 
-    graphs, infos = build_hierarchy(g0, cfg)
+    with PHASES.phase("coarsen"):
+        graphs, infos = build_hierarchy(g0, cfg)
     L = len(graphs)
     stats.levels = L
     stats.level_sizes = tuple((g.n, g.m) for g in graphs)
@@ -248,20 +272,22 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
                           grid_threshold=cfg.grid_threshold,
                           coarsest_iters=cfg.coarsest_iters,
                           finest_iters=cfg.finest_iters,
-                          ideal_len=cfg.ideal_len)
+                          ideal_len=cfg.ideal_len, n_pad=gk.n_pad)
     pos = gila.random_init(gk, cfg.ideal_len * max(gk.n, 4) ** 0.5, cfg.seed)
     pos = _layout_one_level(gk, pos, sched, cfg, cfg.seed + L)
 
     # walk the hierarchy back down: place, then refine
     for i in range(L - 2, -1, -1):
         gi = graphs[i]
-        pos = solar_placer(gi, infos[i], pos, seed=cfg.seed + i,
-                           scatter_scale=0.5 * cfg.ideal_len)
+        with PHASES.phase("place"):
+            pos = solar_placer(gi, infos[i], pos, seed=cfg.seed + i,
+                               scatter_scale=0.5 * cfg.ideal_len)
+            pos.block_until_ready()         # keep device time in-phase
         sched = make_schedule(i, L, gi.n, gi.m, exact_threshold=exact_thr,
                               grid_threshold=cfg.grid_threshold,
                               coarsest_iters=cfg.coarsest_iters,
                               finest_iters=cfg.finest_iters,
-                              ideal_len=cfg.ideal_len)
+                              ideal_len=cfg.ideal_len, n_pad=gi.n_pad)
         pos = _layout_one_level(gi, pos, sched, cfg, cfg.seed + i)
 
     pos = np.asarray(pos, np.float32)[: g0.n]

@@ -44,8 +44,17 @@ def make_schedule(level: int, n_levels: int, n: int, m: int,
                   *, exact_threshold: int = 2048,
                   grid_threshold: int = 32768,
                   coarsest_iters: int = 300, finest_iters: int = 50,
-                  ideal_len: float = 1.0) -> LevelSchedule:
-    """level = 0 is the input graph; level = n_levels-1 is the coarsest."""
+                  ideal_len: float = 1.0,
+                  n_pad: int | None = None) -> LevelSchedule:
+    """level = 0 is the input graph; level = n_levels-1 is the coarsest.
+
+    ``n_pad`` is the level's padded (bucketed) vertex count. The STATIC
+    compiled-shape parameters — grid_dim/cell_cap — are chosen from it, so
+    every graph in the same shape bucket shares one compiled program
+    (core/bucketing.py). Mode selection stays on the true ``n``: with the
+    default power-of-two thresholds, ``n ≤ T ⇔ bucket_pad(n) ≤ T``, so two
+    same-bucket graphs can never disagree on the mode anyway.
+    """
     k = paper_k_schedule(m)
     cap = {1: 32, 2: 64, 3: 128, 4: 192, 5: 256, 6: 256}[k]
     # geometric interpolation: coarse → many iterations, fine → few
@@ -67,7 +76,7 @@ def make_schedule(level: int, n_levels: int, n: int, m: int,
         # deferred import: keeps the Pallas kernel stack off the module
         # import path for consumers that never select grid mode
         from repro.kernels.grid_force import choose_grid
-        grid_dim, cell_cap = choose_grid(n)
+        grid_dim, cell_cap = choose_grid(n_pad if n_pad is not None else n)
     return LevelSchedule(k=k, cap=cap, iters=max(iters, 10), temp0=temp0,
                          temp_decay=0.985 if level == n_levels - 1 else 0.96,
                          mode=mode, grid_dim=grid_dim, cell_cap=cell_cap)

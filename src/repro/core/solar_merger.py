@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.graph import PaddedGraph, build_graph, edge_gather
+from repro.utils.prng import uniform_per_vertex
 
 UNASSIGNED, SUN, PLANET, MOON = 0, 1, 2, 3
 
@@ -82,7 +83,10 @@ def sun_election(g: PaddedGraph, st: MergerState, key: jnp.ndarray,
     n_pad = g.n_pad
     ids = jnp.arange(n_pad, dtype=jnp.int32)
     unassigned = (st.state == UNASSIGNED) & g.vmask
-    coin = jax.random.uniform(key, (n_pad,)) < p
+    # per-vertex coin streams (utils/prng.py): vertex v's draw depends only
+    # on (key, v), not on the padding bucket — re-padding the same graph
+    # elects the same suns (the bucketing parity contract)
+    coin = uniform_per_vertex(key, ids) < p
     cand = unassigned & (coin | forced)
 
     # candidates announce their ID; two forwarding supersteps compute, per
@@ -156,6 +160,10 @@ def run_merger(g: PaddedGraph, *, p_sun: float = 0.35, seed: int = 0,
     which guarantees at least one new sun and hence termination.
     """
     st = init_state(g)
+    # the jitted supersteps never read the static n/m fields, so normalize
+    # them away: the jit caches key on padded shapes only, and every graph
+    # in the same shape bucket reuses one compiled program (bucketing.py)
+    gn = dataclasses.replace(g, n=0, m=0)
     key = jax.random.PRNGKey(seed)
     prev_remaining = g.n + 1
     stalls = 0
@@ -167,9 +175,9 @@ def run_merger(g: PaddedGraph, *, p_sun: float = 0.35, seed: int = 0,
         # until convergence — O(log n) rounds with strict progress.
         desperate = desperate or stalls >= 2
         forced = jnp.asarray(desperate or r % force_every == force_every - 1)
-        st = sun_election(g, st, sub, jnp.asarray(p_sun, jnp.float32), forced,
+        st = sun_election(gn, st, sub, jnp.asarray(p_sun, jnp.float32), forced,
                           jnp.asarray(not desperate))
-        st = system_growth(g, st)
+        st = system_growth(gn, st)
         # BSP halting vote (host sync, as a Giraph aggregator would)
         remaining = int(jnp.sum((st.state == UNASSIGNED) & g.vmask))
         if remaining == 0:
@@ -239,14 +247,16 @@ class LevelInfo:
     sun_pos_index: np.ndarray  # int32[n_coarse] — level-i vertex of each coarse vertex
 
 
-def next_level(g: PaddedGraph, st: MergerState, *, pad_mult: int = 256
-               ) -> tuple[PaddedGraph, LevelInfo]:
+def next_level(g: PaddedGraph, st: MergerState, *, pad_mult: int = 256,
+               bucket: bool = False) -> tuple[PaddedGraph, LevelInfo]:
     """Collapse solar systems into suns → coarse graph (host compaction).
 
     Coarse vertices = suns (mass = Σ member masses); coarse edges = unique
     inter-system links, weighted by the longest member path
     (depth_u + 1 + depth_v) over all parallel links, times the max endpoint
     edge weight (so weights compound across levels as in FM³).
+    ``bucket=True`` pads the coarse graph to pow2 shape buckets
+    (core/bucketing.py).
     """
     n_pad = g.n_pad
     state = np.asarray(st.state)
@@ -296,7 +306,8 @@ def next_level(g: PaddedGraph, st: MergerState, *, pad_mult: int = 256
         w_max = np.zeros((0,), np.float32)
 
     sun_pos_index = np.nonzero(is_sun)[0].astype(np.int32)
-    cg = build_graph(ce, n_coarse, mass=cmass, ewt=w_max, pad_mult=pad_mult)
+    cg = build_graph(ce, n_coarse, mass=cmass, ewt=w_max, pad_mult=pad_mult,
+                     bucket=bucket)
     info = LevelInfo(
         parent_coarse=parent_coarse[:n_pad].astype(np.int32),
         sun_of=sun_safe[:n_pad].astype(np.int32),

@@ -13,8 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dataclasses
+
 from repro.graphs.graph import PaddedGraph, edge_gather
 from repro.core.solar_merger import LevelInfo, SUN
+from repro.utils.prng import uniform_per_vertex
 
 
 @jax.jit
@@ -47,7 +50,10 @@ def _place(g: PaddedGraph, sun_of: jnp.ndarray, depth: jnp.ndarray,
     mean_sugg = acc / jnp.maximum(cnt, 1.0)[:, None]
     # members without inter-system paths scatter deterministically around
     # their sun (radius ∝ depth), as FM³ does for isolated system members.
-    ang = jax.random.uniform(key, (n_pad,), minval=0.0, maxval=2 * jnp.pi)
+    # angles come from per-vertex streams (utils/prng.py) so re-padding to
+    # a different shape bucket scatters every real vertex identically.
+    ids = jnp.arange(n_pad, dtype=jnp.int32)
+    ang = uniform_per_vertex(key, ids, minval=0.0, maxval=2 * np.pi)
     offs = jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=1)
     radius = scatter_scale * jnp.maximum(depth, 1).astype(jnp.float32)
     scatter = sun_pos + offs * radius[:, None]
@@ -67,8 +73,10 @@ def solar_placer(g: PaddedGraph, info: LevelInfo, coarse_pos: np.ndarray,
     sun_of = jnp.asarray(info.sun_of)
     depth = jnp.asarray(np.maximum(info.depth, 0))
     key = jax.random.PRNGKey(seed)
-    pos = _place(g, sun_of, depth, member_sun_pos, key,
-                 jnp.asarray(scatter_scale, jnp.float32))
+    # normalize the static n/m fields so _place's jit cache keys on padded
+    # shapes only (one compile per shape bucket, core/bucketing.py)
+    pos = _place(dataclasses.replace(g, n=0, m=0), sun_of, depth,
+                 member_sun_pos, key, jnp.asarray(scatter_scale, jnp.float32))
     # suns sit exactly at their coarse position
     is_sun = jnp.asarray(info.state == SUN) & g.vmask
     pos = jnp.where(is_sun[:, None], member_sun_pos, pos)

@@ -22,6 +22,18 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+def bucket_pad(x: int, minimum: int = 256) -> int:
+    """Next power-of-two ≥ max(x, minimum) — the shape-bucket padding.
+
+    Pow2 buckets give every level of every hierarchy one of O(log n)
+    distinct shapes, so jitted per-level programs (keyed on padded shapes,
+    core/bucketing.py) are compiled once per bucket and reused across
+    levels AND across graphs.
+    """
+    x = max(int(x), minimum, 1)
+    return 1 << (x - 1).bit_length()
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PaddedGraph:
@@ -65,19 +77,24 @@ class PaddedGraph:
 
 def build_graph(edges: np.ndarray, n: int, *, n_pad: int | None = None,
                 m_pad: int | None = None, mass: np.ndarray | None = None,
-                ewt: np.ndarray | None = None, pad_mult: int = 256) -> PaddedGraph:
+                ewt: np.ndarray | None = None, pad_mult: int = 256,
+                bucket: bool = False) -> PaddedGraph:
     """Build a PaddedGraph from a unique undirected edge list ``edges[k,2]``.
 
     Self loops and duplicate edges must already be removed. ``n_pad``/``m_pad``
-    default to the sizes rounded up to ``pad_mult`` (power-of-two-ish buckets
-    keep XLA recompilation bounded across multilevel graphs).
+    default to the sizes rounded up to ``pad_mult``; with ``bucket=True``
+    they instead round up to the next power-of-two bucket (``bucket_pad``),
+    which the multilevel driver uses to reuse compiled per-level programs
+    across levels and graphs (core/bucketing.py).
     """
     edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
     m = int(edges.shape[0])
     if n_pad is None:
-        n_pad = max(_round_up(max(n, 1), pad_mult), pad_mult)
+        n_pad = (bucket_pad(n, pad_mult) if bucket
+                 else max(_round_up(max(n, 1), pad_mult), pad_mult))
     if m_pad is None:
-        m_pad = max(_round_up(max(2 * m, 1), pad_mult), pad_mult)
+        m_pad = (bucket_pad(2 * m, pad_mult) if bucket
+                 else max(_round_up(max(2 * m, 1), pad_mult), pad_mult))
     assert m_pad >= 2 * m and n_pad >= n
 
     src = np.full((m_pad,), n_pad, dtype=np.int32)

@@ -1,0 +1,44 @@
+"""Padding-independent per-vertex randomness.
+
+``jax.random.uniform(key, (n_pad,))`` derives the value at index i from the
+*buffer shape*: the counter space of the threefry stream is carved up by the
+total element count, so re-padding a graph to a different bucket changes the
+random draw of every valid vertex. That would make the pow2 shape-bucketing
+of the multilevel driver (core/bucketing.py) behavior-CHANGING instead of
+behavior-preserving.
+
+The helpers here derive per-vertex streams by ``fold_in``-ing the vertex
+index into the key, so the value at index i depends only on (key, i). A
+graph padded to 512 and the same graph padded to 1024 draw identical values
+for every real vertex — the basis of the bucketed-vs-exact-shape parity
+guarantee (tests/test_bucketing.py).
+
+All functions are trace-compatible (used inside jitted supersteps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fold_in_keys(key: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """One PRNG key per id: keys[i] = fold_in(key, ids[i])."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+
+
+def uniform_per_vertex(key: jnp.ndarray, ids: jnp.ndarray,
+                       minval: float = 0.0, maxval: float = 1.0
+                       ) -> jnp.ndarray:
+    """float32[len(ids)] uniforms; element i depends only on (key, ids[i])."""
+    ks = fold_in_keys(key, ids)
+    return jax.vmap(
+        lambda k: jax.random.uniform(k, (), minval=minval, maxval=maxval))(ks)
+
+
+def uniform2_per_vertex(key: jnp.ndarray, ids: jnp.ndarray,
+                        minval: float = 0.0, maxval: float = 1.0
+                        ) -> jnp.ndarray:
+    """float32[len(ids), 2] uniforms, per-vertex streams (for positions)."""
+    ks = fold_in_keys(key, ids)
+    return jax.vmap(
+        lambda k: jax.random.uniform(k, (2,), minval=minval, maxval=maxval))(ks)

@@ -1,0 +1,54 @@
+"""Layout-quality regression gate.
+
+``quality_report`` (NELD / CRE / sampled stress) on the CI-sized
+RegularGraphs suite, asserted against recorded bounds. The bounds are the
+values measured at the time this gate was recorded (PR 4, seed=0,
+deterministic on the CPU backend) times a generous slack factor — future
+PRs can refactor the driver freely but cannot *silently* degrade drawing
+quality past the slack.
+
+If a deliberate algorithm change moves a metric past its bound, re-record:
+
+    PYTHONPATH=src python -m pytest tests/test_quality_regression.py -s \
+        --tb=no  # the failure message prints measured vs bound
+"""
+import numpy as np
+import pytest
+
+from repro.graphs import generators as G, build_graph
+from repro.graphs.metrics import quality_report
+from repro.core import multigila_layout, LayoutConfig
+
+
+# measured with LayoutConfig(seed=0) on the jax-cpu backend at record time;
+# asserted with slack: neld ≤ 1.4·rec + 0.05, cre ≤ 1.5·rec + 0.1,
+# stress ≤ 1.6·rec + 0.01
+RECORDED = {
+    "grid_8_8":   dict(neld=0.136, cre=0.000, stress=0.0226),
+    "tree_3_3":   dict(neld=0.439, cre=0.000, stress=0.0830),
+    "cyl_8_6":    dict(neld=0.198, cre=0.682, stress=0.0933),
+    "sierp_3":    dict(neld=0.165, cre=0.000, stress=0.0115),
+    "snow_3_2_1": dict(neld=0.401, cre=0.000, stress=0.0503),
+    "spider_4_5": dict(neld=0.207, cre=0.154, stress=0.0511),
+    "flower_4_5": dict(neld=0.521, cre=1.467, stress=0.0897),
+    "rnd_64_4":   dict(neld=0.322, cre=4.065, stress=0.1827),
+}
+
+SUITE = G.regulargraphs_suite(small=True)
+
+
+@pytest.mark.parametrize("name,e,n", SUITE, ids=[s[0] for s in SUITE])
+def test_quality_no_regression(name, e, n):
+    rec = RECORDED[name]
+    pos, _ = multigila_layout(e, n, LayoutConfig(seed=0))
+    g = build_graph(e, n)
+    p = np.zeros((g.n_pad, 2), np.float32)
+    p[:n] = pos
+    rep = quality_report(g, p)
+    bounds = dict(neld=1.4 * rec["neld"] + 0.05,
+                  cre=1.5 * rec["cre"] + 0.1,
+                  stress=1.6 * rec["stress"] + 0.01)
+    for metric, bound in bounds.items():
+        assert rep[metric] <= bound, (
+            f"{name}.{metric} regressed: measured {rep[metric]:.4f} "
+            f"> bound {bound:.4f} (recorded {rec[metric]:.4f})")

@@ -88,3 +88,103 @@ def test_hierarchy_shrinks():
     assert all(sizes[i + 1] < sizes[i] for i in range(len(sizes) - 1))
     # FM3-like shrink rate: at least 2× per level on meshes
     assert sizes[1] <= sizes[0] / 2
+
+
+# -- hypothesis property tests: Solar Merger invariants on random graphs ------
+
+try:
+    from hypothesis import given, settings, strategies as st_
+    HAVE_HYPOTHESIS = True
+except ImportError:          # dev extra — pip install -r requirements-dev.txt
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st_.composite
+    def random_graph(draw, max_n=32):
+        n = draw(st_.integers(4, max_n))
+        m = draw(st_.integers(0, min(3 * n, n * (n - 1) // 2)))
+        rng = np.random.default_rng(draw(st_.integers(0, 2 ** 31)))
+        e = rng.integers(0, n, size=(m, 2))
+        e = e[e[:, 0] != e[:, 1]]
+        e = np.unique(np.sort(e, axis=1), axis=0) if len(e) else \
+            np.zeros((0, 2), np.int64)
+        return e, n
+
+    @given(random_graph())
+    @settings(max_examples=25, deadline=None)
+    def test_merger_depth_and_parent_chains_property(g):
+        """Final depth ∈ {0,1,2} for every real vertex; every parent chain
+        reaches a SUN in ≤ 2 hops (sun→itself, planet→sun, moon→planet→sun).
+        Holds on arbitrary random graphs, isolated vertices included."""
+        edges, n = g
+        pg = build_graph(edges, n)
+        stt = run_merger(pg, seed=3)
+        state = np.asarray(stt.state)
+        depth = np.asarray(stt.depth)
+        parent = np.asarray(stt.parent)
+        vm = np.asarray(pg.vmask)
+
+        assert (state[vm] > 0).all()
+        assert ((depth[vm] >= 0) & (depth[vm] <= 2)).all()
+        for v in np.nonzero(vm)[0]:
+            u, hops = int(v), 0
+            while state[u] != SUN:
+                u = int(parent[u])
+                hops += 1
+                assert hops <= 2, (v, hops)
+                assert u < pg.n_pad and vm[u], (v, u)
+            assert hops == depth[v], (v, hops, depth[v])
+
+    @given(random_graph())
+    @settings(max_examples=20, deadline=None)
+    def test_merger_new_suns_independent_per_round_property(g):
+        """Suns elected within one round form an independent set — even in
+        desperation mode, two adjacent candidates cannot both survive the
+        1-hop conflict broadcast (the larger id dominates)."""
+        import jax
+        import jax.numpy as jnp
+        from repro.core.solar_merger import (init_state, sun_election,
+                                             system_growth)
+        edges, n = g
+        pg = build_graph(edges, n)
+        vm = np.asarray(pg.vmask)
+        und = np.asarray(edges, np.int64).reshape(-1, 2)
+
+        # replicate run_merger's control flow (incl. stall → desperation)
+        stt = init_state(pg)
+        key = jax.random.PRNGKey(11)
+        prev_remaining, stalls, desperate = n + 1, 0, False
+        for r in range(96):
+            key, sub = jax.random.split(key)
+            desperate = desperate or stalls >= 2
+            forced = jnp.asarray(desperate or r % 4 == 3)
+            suns_before = (np.asarray(stt.state) == SUN) & vm
+            stt = sun_election(pg, stt, sub, jnp.asarray(0.35, jnp.float32),
+                               forced, jnp.asarray(not desperate))
+            new_sun = ((np.asarray(stt.state) == SUN) & vm) & ~suns_before
+            if len(und):
+                both = new_sun[und[:, 0]] & new_sun[und[:, 1]]
+                assert not both.any(), und[both]
+            stt = system_growth(pg, stt)
+            remaining = int(((np.asarray(stt.state) == 0) & vm).sum())
+            if remaining == 0:
+                return
+            stalls = 0 if remaining < prev_remaining else stalls + 1
+            prev_remaining = remaining
+        raise AssertionError("merger replica did not converge")
+
+    @given(random_graph())
+    @settings(max_examples=20, deadline=None)
+    def test_next_level_conserves_mass_property(g):
+        """Collapsing systems into suns conserves total vertex mass."""
+        edges, n = g
+        pg = build_graph(edges, n)
+        stt = run_merger(pg, seed=5)
+        cg, info = next_level(pg, stt)
+        total = float(np.asarray(pg.mass)[np.asarray(pg.vmask)].sum())
+        coarse = float(np.asarray(cg.mass)[np.asarray(cg.vmask)].sum())
+        assert abs(total - coarse) < 1e-3 * max(total, 1.0), (total, coarse)
+        # every valid vertex landed in exactly one system
+        pc = info.parent_coarse[np.asarray(pg.vmask)]
+        assert (pc >= 0).all() and (pc < cg.n).all()
