@@ -18,10 +18,10 @@ def main(argv=None) -> None:
                     help="CI-sized instances")
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig5,table3,kernels,serve,"
-                         "pipeline")
+                         "pipeline,many")
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else {
-        "table1", "fig5", "table3", "kernels", "serve", "pipeline"}
+        "table1", "fig5", "table3", "kernels", "serve", "pipeline", "many"}
 
     csv = []
     if "table1" in want:
@@ -57,6 +57,12 @@ def main(argv=None) -> None:
               flush=True)
         from benchmarks import pipeline_bench as pb
         csv += pb.csv_rows(pb.run(kind))
+
+    if "many" in want:
+        print("== Many: batched multi-graph layout vs sequential driver ==",
+              flush=True)
+        from benchmarks import many_bench as mb
+        csv += mb.csv_rows(mb.run("smoke" if args.small else "full"))
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv:

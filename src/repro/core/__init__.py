@@ -2,9 +2,9 @@
 # force-directed layout algorithm, adapted from the Giraph/TLAV paradigm to
 # TPU-native JAX (dense supersteps + shard_map distribution).
 from repro.core.multilevel import (LayoutConfig, LayoutStats, multigila_layout,
-                                   layout_component, build_hierarchy,
-                                   connected_components, LevelExport,
-                                   HierarchyExport)
+                                   multigila_layout_many, layout_component,
+                                   build_hierarchy, connected_components,
+                                   LevelExport, HierarchyExport)
 from repro.core.solar_merger import (run_merger, next_level, init_state,
                                      MergerState, LevelInfo,
                                      UNASSIGNED, SUN, PLANET, MOON)

@@ -69,44 +69,78 @@ def khop_neighbors(edges: np.ndarray, n: int, k: int, cap: int,
     """Padded k-hop neighbor lists via iterated expansion with random
     subsampling above ``cap`` (GiLA's flooding with bounded message load).
 
+    Fully vectorized over (vertex, neighbor) pair arrays — the previous
+    per-vertex Python loop was O(n) host work per level and dominated
+    mid-level setup time. Per round: the frontier pairs (v, u) expand to
+    u's CSR neighborhood with ``np.repeat`` range arithmetic, candidates
+    are deduplicated and checked against the accumulated sets via sorted
+    ``v·(n+1)+u`` keys, and each vertex admits a uniform random sample of
+    its remaining room (rank-by-random-priority within the vertex group —
+    equivalent to the old per-vertex ``rng.choice`` without replacement).
+    Deterministic in ``seed``; the random stream differs from the old
+    loop's, and each vertex's list is returned in ascending id order.
+
     Returns (idx[n, cap] int32 with sentinel n, mask[n, cap] bool).
     """
     rng = np.random.default_rng(seed)
     row_ptr, col = to_csr(edges, n)
-    # hop-1 lists (capped)
-    lists: list[np.ndarray] = []
-    for v in range(n):
-        nb = col[row_ptr[v]:row_ptr[v + 1]]
-        if len(nb) > cap:
-            nb = rng.choice(nb, size=cap, replace=False)
-        lists.append(nb.astype(np.int64))
-    if k > 1:
-        cur = [set(l.tolist()) for l in lists]
-        frontier = [set(l.tolist()) for l in lists]
-        for _ in range(k - 1):
-            new_frontier = []
-            for v in range(n):
-                acc: set = set()
-                if len(cur[v]) < cap:
-                    for u in frontier[v]:
-                        acc.update(col[row_ptr[u]:row_ptr[u + 1]].tolist())
-                    acc -= cur[v]
-                    acc.discard(v)
-                    room = cap - len(cur[v])
-                    if len(acc) > room:
-                        acc = set(rng.choice(np.fromiter(acc, dtype=np.int64),
-                                             size=room, replace=False).tolist())
-                    cur[v] |= acc
-                new_frontier.append(acc)
-            frontier = new_frontier
-        lists = [np.fromiter(s, dtype=np.int64) for s in cur]
+    deg = np.diff(row_ptr).astype(np.int64)
+    col = col.astype(np.int64)
+    base = n + 1                      # (v, u) pair → unique int64 key
 
+    def per_vertex_sample(v, u, room_of):
+        """Keep a uniform random sample of ≤ room_of[v] pairs per vertex
+        (rank candidates by random priority within each vertex group)."""
+        pri = rng.random(v.size)
+        order = np.lexsort((pri, v))
+        sv, su = v[order], u[order]
+        rank = np.arange(sv.size) - np.searchsorted(sv, sv, side="left")
+        keep = rank < room_of[sv]
+        return sv[keep], su[keep]
+
+    # hop 1: the CSR pairs themselves, subsampled to cap where deg > cap
+    src_v = np.repeat(np.arange(n, dtype=np.int64), deg)
+    cv, cu = per_vertex_sample(src_v, col, np.full(n, cap, np.int64))
+    counts = np.bincount(cv, minlength=n)
+    cur_keys = np.sort(cv * base + cu)
+    fv, fu = cv, cu                   # frontier: last round's additions
+
+    for _ in range(k - 1):
+        room_of = cap - counts
+        act = room_of[fv] > 0 if fv.size else np.zeros(0, bool)
+        fv, fu = fv[act], fu[act]
+        if fv.size == 0:
+            break
+        # expand each frontier pair (v, u) to u's whole neighborhood
+        d_u = deg[fu]
+        tot = int(d_u.sum())
+        if tot == 0:
+            break
+        ev = np.repeat(fv, d_u)
+        idx_ = (np.repeat(row_ptr[fu], d_u)
+                + (np.arange(tot) - np.repeat(np.cumsum(d_u) - d_u, d_u)))
+        ew = col[idx_]
+        ok = ev != ew
+        keys = np.unique(ev[ok] * base + ew[ok])          # dedup candidates
+        # drop pairs already collected (cur_keys is sorted + unique)
+        pos = np.searchsorted(cur_keys, keys)
+        pos = np.minimum(pos, max(cur_keys.size - 1, 0))
+        fresh = (keys != cur_keys[pos]) if cur_keys.size else \
+            np.ones(keys.size, bool)
+        keys = keys[fresh]
+        if keys.size == 0:
+            break
+        av, au = per_vertex_sample(keys // base, keys % base, room_of)
+        counts = counts + np.bincount(av, minlength=n)
+        cur_keys = np.sort(np.concatenate([cur_keys, av * base + au]))
+        fv, fu = av, au
+
+    allv, allu = cur_keys // base, cur_keys % base        # sorted by (v, u)
+    rank = np.arange(allv.size) - np.searchsorted(allv, allv, side="left")
     idx = np.full((n, cap), n, dtype=np.int32)
     mask = np.zeros((n, cap), dtype=bool)
-    for v, l in enumerate(lists):
-        l = l[:cap]
-        idx[v, : len(l)] = l
-        mask[v, : len(l)] = True
+    idx[allv, rank] = allu
+    mask[allv, rank] = True
     return idx, mask
 
 

@@ -379,6 +379,173 @@ def _merge_exports(exports: list, index_maps: list, edges: np.ndarray,
     return HierarchyExport(levels=levels, pos=np.asarray(pos, np.float32))
 
 
+class _ComponentTask:
+    """Refinement state machine of one connected component, for the batched
+    multi-graph driver (``multigila_layout_many``).
+
+    Construction runs everything UP TO refinement exactly as
+    ``layout_component`` does (pruning → hierarchy → schedules); the driver
+    then pulls one ``RefineRequest`` per wave (coarsest level first, the
+    placer invoked in between) and feeds the refined positions back.
+    Per-level randomness, seeds and schedules match ``layout_component``
+    line for line — with padding invariance (graphs/packing.py) that makes
+    every fed-back position bit-identical to the sequential driver's.
+    """
+
+    def __init__(self, edges: np.ndarray, n: int, cfg: LayoutConfig):
+        self.cfg = cfg
+        self.stats = LayoutStats()
+        self.n = n
+        self.final: np.ndarray | None = None
+        self.pr = None
+        if n == 1:
+            self.final = np.zeros((1, 2), np.float32)
+            return
+        if cfg.prune:
+            self.pr = prune_degree_one(edges, n)
+        self.work_edges = self.pr.edges if self.pr is not None else edges
+        work_n = self.pr.n if self.pr is not None else n
+        mass = self.pr.mass if self.pr is not None else None
+        if work_n == 0 or len(self.work_edges) == 0:
+            # star graphs collapse entirely under pruning (layout_component)
+            self.final = (reinsert(self.pr,
+                                   np.zeros((max(work_n, 1), 2), np.float32),
+                                   self.work_edges)
+                          if self.pr is not None
+                          else np.zeros((n, 2), np.float32))
+            return
+        self.g0 = build_graph(self.work_edges, work_n, mass=mass, bucket=True)
+        with PHASES.phase("coarsen"):
+            self.graphs, self.infos = build_hierarchy(self.g0, cfg)
+        L = len(self.graphs)
+        self.stats.levels = L
+        self.stats.level_sizes = tuple((g.n, g.m) for g in self.graphs)
+        self._level = L - 1          # next level to refine (coarsest first)
+        self._pos = None             # refined positions of the level above
+
+    @property
+    def done(self) -> bool:
+        return self.final is not None
+
+    def _sched(self, i: int) -> LevelSchedule:
+        cfg, gi, L = self.cfg, self.graphs[i], len(self.graphs)
+        return make_schedule(i, L, gi.n, gi.m,
+                             exact_threshold=cfg.exact_threshold,
+                             grid_threshold=cfg.grid_threshold,
+                             coarsest_iters=cfg.coarsest_iters,
+                             finest_iters=cfg.finest_iters,
+                             ideal_len=cfg.ideal_len, n_pad=gi.n_pad)
+
+    def next_request(self) -> bucketing.RefineRequest:
+        """Placement (when walking down) + the level's refine request,
+        re-padded to its lane bucket."""
+        assert not self.done
+        cfg, i, L = self.cfg, self._level, len(self.graphs)
+        gi = self.graphs[i]
+        if i == L - 1:
+            pos0 = gila.random_init(gi, cfg.ideal_len * max(gi.n, 4) ** 0.5,
+                                    cfg.seed)
+            seed = cfg.seed + L
+        else:
+            with PHASES.phase("place"):
+                pos0 = solar_placer(gi, self.infos[i], self._pos,
+                                    seed=cfg.seed + i,
+                                    scatter_scale=0.5 * cfg.ideal_len)
+                pos0.block_until_ready()
+            seed = cfg.seed + i
+        return bucketing.make_request(gi, pos0, self._sched(i), seed)
+
+    def feed(self, pos) -> None:
+        """Accept the refined positions of the current level; finalize
+        (reinsert pruned leaves) after the finest level."""
+        self._pos = pos
+        self._level -= 1
+        if self._level >= 0:
+            return
+        p = np.asarray(pos, np.float32)[: self.g0.n]
+        if self.pr is not None:
+            self.final = reinsert(self.pr, p, self.work_edges)
+        else:
+            self.final = p[: self.n]
+
+
+def multigila_layout_many(graphs: list, cfg: LayoutConfig | None = None,
+                          *, seeds: list | None = None) -> list:
+    """Batched multi-graph Multi-GiLA: lay out B graphs through grouped,
+    vmapped per-level refinement steps (one device program per level wave).
+
+    ``graphs`` is a list of ``(edges, n)`` pairs; ``seeds`` optionally
+    overrides ``cfg.seed`` per graph. Returns ``[(pos[n, 2], LayoutStats)]``
+    in input order. Coarsening and placement run per component (they are
+    host-synchronized and cheap); every wave of per-level refinements is
+    grouped by shape bucket (core/bucketing.py:group_key) and dispatched as
+    ONE vmapped cached step, so a warm-bucket request compiles nothing and
+    each per-graph result is bit-identical to ``multigila_layout`` run one
+    graph at a time (tests/test_many.py, benchmarks/many_bench.py).
+    """
+    cfg = cfg or LayoutConfig()
+    if cfg.engine != "multigila":
+        raise ValueError("multigila_layout_many supports engine='multigila' "
+                         f"only, got {cfg.engine!r}")
+    if not cfg.bucketing:
+        raise ValueError("multigila_layout_many requires cfg.bucketing=True")
+    if seeds is not None and len(seeds) != len(graphs):
+        raise ValueError("seeds must match graphs in length")
+
+    entries, all_tasks = [], []
+    for k, (edges, n) in enumerate(graphs):
+        gcfg = (cfg if seeds is None
+                else dataclasses.replace(cfg, seed=int(seeds[k])))
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        labels = connected_components(edges, n)
+        comp_tasks, index_maps = [], []
+        for c in np.unique(labels):
+            vs = np.nonzero(labels == c)[0]
+            remap = np.full(n, -1, np.int64)
+            remap[vs] = np.arange(vs.size)
+            emask = labels[edges[:, 0]] == c
+            ce = np.stack([remap[edges[emask, 0]], remap[edges[emask, 1]]], 1)
+            t = _ComponentTask(ce, vs.size, gcfg)
+            comp_tasks.append(t)
+            index_maps.append(vs)
+            all_tasks.append(t)
+        entries.append((n, comp_tasks, index_maps))
+
+    # wave loop: every unfinished component contributes its next level;
+    # same-bucket requests share one vmapped dispatch
+    while True:
+        pend = [(t, t.next_request()) for t in all_tasks if not t.done]
+        if not pend:
+            break
+        groups: dict = {}
+        for t, r in pend:
+            groups.setdefault(bucketing.group_key(r), []).append((t, r))
+        for members in groups.values():
+            outs = bucketing.refine_level_many(
+                [r for _, r in members], ideal_len=cfg.ideal_len,
+                rep_const=cfg.rep_const)
+            for (t, _), pos in zip(members, outs):
+                t.feed(pos)
+
+    # assemble per-graph results (component packing as in multigila_layout)
+    results = []
+    for n, comp_tasks, index_maps in entries:
+        if len(comp_tasks) == 1:
+            results.append((comp_tasks[0].final, comp_tasks[0].stats))
+            continue
+        stats = LayoutStats()
+        layouts = []
+        for t in comp_tasks:
+            stats.levels = max(stats.levels, t.stats.levels)
+            layouts.append(np.asarray(t.final))
+        packed = _pack_components(layouts)
+        pos = np.zeros((n, 2), np.float32)
+        for vs, P in zip(index_maps, packed):
+            pos[vs] = P
+        results.append((pos, stats))
+    return results
+
+
 def multigila_layout(edges: np.ndarray, n: int,
                      cfg: LayoutConfig | None = None, *,
                      export: bool = False):

@@ -21,7 +21,19 @@ from repro.graphs.graph import PaddedGraph, edge_gather
 def _propagate(g: PaddedGraph, labels: jnp.ndarray, loads: jnp.ndarray,
                key: jnp.ndarray, capacity: jnp.ndarray):
     """One Spinner superstep: each vertex scores every label by neighbor
-    frequency minus a load penalty, and adopts the argmax with prob 1/2."""
+    frequency minus a load penalty, and adopts the argmax with prob 1/2 —
+    subject to a per-label migration quota.
+
+    Without the quota, all coin-flip winners migrate SIMULTANEOUSLY: a
+    label whose load sits just under capacity can absorb an unbounded
+    number of movers in one superstep and overshoot the ``slack`` balance
+    promise of ``spinner_partition`` arbitrarily. Each superstep therefore
+    admits at most ``capacity - load`` movers per label (ranked by vertex
+    id via a stable sort — deterministic under the seed); the rest stay
+    put and may retry next round. Loads are monotone bounded: a label only
+    ever grows up to capacity, so max load ≤ max(initial load, capacity)
+    at every step (asserted in tests/test_distributed.py).
+    """
     n_pad, P = g.n_pad, loads.shape[0]
     onehot = jax.nn.one_hot(labels, P, dtype=jnp.float32)       # [n_pad, P]
     msgs = edge_gather(g, onehot)
@@ -32,7 +44,18 @@ def _propagate(g: PaddedGraph, labels: jnp.ndarray, loads: jnp.ndarray,
     score = freq / deg - penalty
     best = jnp.argmax(score, axis=1).astype(jnp.int32)
     flip = jax.random.bernoulli(key, 0.5, (n_pad,))
-    new = jnp.where(flip & g.vmask, best, labels)
+    wants = flip & g.vmask & (best != labels)
+    # per-label quota: rank the movers targeting each label (stable sort on
+    # the target → rank = position within the label group, i.e. vertex-id
+    # order) and admit only as many as the label has headroom for
+    target = jnp.where(wants, best, P)                           # P = "no move"
+    order = jnp.argsort(target)                                  # stable
+    ts = target[order]
+    rank = jnp.arange(n_pad) - jnp.searchsorted(ts, ts, side="left")
+    quota = jnp.floor(jnp.maximum(capacity - loads, 0.0))        # [P]
+    ok_sorted = (ts < P) & (rank < quota[jnp.clip(ts, 0, P - 1)])
+    admitted = jnp.zeros((n_pad,), bool).at[order].set(ok_sorted)
+    new = jnp.where(admitted, best, labels)
     new_loads = jnp.bincount(jnp.where(g.vmask, new, P), length=P + 1)[:P]
     return new, new_loads.astype(jnp.float32)
 

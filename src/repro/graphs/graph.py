@@ -128,6 +128,21 @@ def unique_edges(g: PaddedGraph) -> np.ndarray:
     return np.stack([src[keep], dst[keep]], axis=1).astype(np.int64)
 
 
+def canonical_edges(edges: np.ndarray) -> np.ndarray:
+    """Canonicalize a raw edge list: drop self loops, sort each pair's
+    endpoints, and collapse duplicates (including reversed duplicates) —
+    the array-level analogue of ``unique_edges``. Metrics that treat edges
+    as undirected segments (graphs/metrics.py) canonicalize through this
+    first, so a list carrying both (u, v) and (v, u) is not double-counted.
+    """
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    e = e[e[:, 0] != e[:, 1]]
+    if e.size == 0:
+        return e.reshape(0, 2)
+    e = np.sort(e, axis=1)
+    return np.unique(e, axis=0)
+
+
 def to_csr(edges: np.ndarray, n: int) -> tuple[np.ndarray, np.ndarray]:
     """Host-side CSR (row_ptr[n+1], col_idx[2m]) from unique undirected edges."""
     edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)

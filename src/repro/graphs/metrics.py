@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.graph import PaddedGraph, unique_edges, to_csr
+from repro.graphs.graph import PaddedGraph, canonical_edges, unique_edges, to_csr
 
 
 def edge_lengths(pos: np.ndarray, edges: np.ndarray) -> np.ndarray:
@@ -46,9 +46,21 @@ def _cross_block(p1, p2, q1, q2, share):
 
 
 def count_crossings(pos: np.ndarray, edges: np.ndarray, block: int = 2048) -> int:
-    """Exact proper-crossing count, blocked O(m^2). Use for m ≲ 5e4."""
+    """Exact proper-crossing count, blocked O(m^2). Use for m ≲ 5e4.
+
+    The edge list is canonicalized first (``canonical_edges``): duplicate
+    and reversed duplicate edges would otherwise each be counted against
+    every segment they cross, silently inflating CRE. Only PROPER
+    (transversal) crossings count — collinear overlaps and shared-endpoint
+    touches are excluded by construction, per the paper's metric.
+    """
+    return _count_crossings_canonical(pos, canonical_edges(edges), block)
+
+
+def _count_crossings_canonical(pos, edges: np.ndarray, block: int) -> int:
+    """Crossing count over an ALREADY-canonical edge list (``cre`` shares
+    one canonicalization pass between the count and its denominator)."""
     pos = np.asarray(pos, dtype=np.float32)
-    edges = np.asarray(edges, dtype=np.int64)
     m = edges.shape[0]
     if m < 2:
         return 0
@@ -75,11 +87,16 @@ def count_crossings(pos: np.ndarray, edges: np.ndarray, block: int = 2048) -> in
 
 
 def cre(pos: np.ndarray, edges: np.ndarray, block: int = 2048) -> float:
-    """Average crossings per edge (each crossing involves 2 edges)."""
-    m = int(np.asarray(edges).shape[0])
+    """Average crossings per edge (each crossing involves 2 edges).
+
+    Normalized by the CANONICAL edge count, so a list carrying duplicates
+    or both edge directions reports the same CRE as its deduplicated form.
+    """
+    edges = canonical_edges(edges)
+    m = int(edges.shape[0])
     if m == 0:
         return 0.0
-    return 2.0 * count_crossings(pos, edges, block) / m
+    return 2.0 * _count_crossings_canonical(pos, edges, block) / m
 
 
 def bfs_distances(edges: np.ndarray, n: int, sources: np.ndarray) -> np.ndarray:

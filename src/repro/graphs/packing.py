@@ -1,0 +1,183 @@
+"""Packing B same-bucket graphs into one batched device program.
+
+The multi-graph driver (``core/multilevel.py:multigila_layout_many``) lays
+out many user graphs at once by stacking every level that lands in the same
+shape bucket into a ``[B, n_pad]`` batched ``PaddedGraph`` and running ONE
+vmapped cached refinement step for the whole group (core/bucketing.py).
+This module owns the two array plumbing pieces that make that safe:
+
+  * ``repad_graph`` — re-pad a ``PaddedGraph`` to a different (n_pad, m_pad),
+    rewriting the sentinel indices. Behavior-preserving by the padding-
+    invariance contract of PR 4 (per-vertex RNG streams, zero-contribution
+    padding rows): the same graph padded to 64 or 256 slots produces
+    bit-identical positions for every real vertex. The batched driver uses
+    this to drop each lane to the FINEST bucket that fits (floor below the
+    single-graph driver's 256), which is where most of the batched speedup
+    comes from — a 45-vertex coarse level costs 64² pair interactions per
+    lane instead of 256².
+  * ``pack_graphs`` / ``pad_lanes`` — stack same-shape lanes into batched
+    arrays and pad the batch axis to a power-of-two lane bucket so the
+    number of compiled batched programs stays logarithmic in the largest
+    request (the same trick as ``serve/query.py``'s query batches). Dead
+    lanes replicate lane 0 with ``iters = 0``, so they are carried through
+    the loop untouched and cost (almost) nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.graph import PaddedGraph, bucket_pad
+
+
+def repad_graph(g: PaddedGraph, n_pad: int, m_pad: int) -> PaddedGraph:
+    """Re-pad ``g`` to (n_pad, m_pad), rewriting sentinels to the new n_pad.
+
+    Valid half-edges are compacted to a prefix in their original order
+    (graphs built by ``build_graph`` already store them that way, so this
+    is the identity permutation and segment-sum accumulation order — and
+    hence the float result — is preserved bit-for-bit).
+    """
+    assert n_pad >= g.n and m_pad >= 2 * g.m, (n_pad, m_pad, g.n, g.m)
+    if n_pad == g.n_pad and m_pad == g.m_pad:
+        return g
+    src_o = np.asarray(g.src)
+    dst_o = np.asarray(g.dst)
+    em_o = np.asarray(g.emask)
+    keep = np.nonzero(em_o)[0]                      # order-preserving compact
+    k = keep.size
+    assert k <= m_pad, (k, m_pad)
+
+    src = np.full((m_pad,), n_pad, np.int32)
+    dst = np.full((m_pad,), n_pad, np.int32)
+    ewt = np.ones((m_pad,), np.float32)
+    emask = np.zeros((m_pad,), bool)
+    src[:k] = src_o[keep]
+    dst[:k] = dst_o[keep]
+    ewt[:k] = np.asarray(g.ewt)[keep]
+    emask[:k] = True
+
+    vmask = np.zeros((n_pad,), bool)
+    vmask[: g.n] = np.asarray(g.vmask)[: g.n]
+    mass = np.zeros((n_pad,), np.float32)
+    mass[: g.n] = np.asarray(g.mass)[: g.n]
+    return PaddedGraph(src=jnp.asarray(src), dst=jnp.asarray(dst),
+                       vmask=jnp.asarray(vmask), emask=jnp.asarray(emask),
+                       mass=jnp.asarray(mass), ewt=jnp.asarray(ewt),
+                       n=g.n, m=g.m)
+
+
+def repad_rows(a, n_pad: int):
+    """Slice or zero-pad the leading (vertex) axis of ``a`` to ``n_pad``
+    rows. Rows past the valid count are padding — their values never reach
+    a real vertex (masks/zero weights), so slicing them off or appending
+    zeros is behavior-preserving."""
+    a = jnp.asarray(a)
+    if a.shape[0] == n_pad:
+        return a
+    if a.shape[0] > n_pad:
+        return a[:n_pad]
+    pad = [(0, n_pad - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad)
+
+
+def incidence_table(g: PaddedGraph, k: int = 32
+                    ) -> tuple[jnp.ndarray, int] | tuple[None, int]:
+    """int32[n_pad, k] half-edge slots arriving at each vertex (sentinel
+    slot = m_pad), or ``(None, max_degree)`` when a vertex's degree exceeds
+    the FIXED column count ``k``.
+
+    ``k`` is deliberately a constant, not a bucket of the observed max
+    degree: it is part of the batched-refine cache key (core/bucketing.py),
+    and the max degree of a random graph family wobbles across pow2
+    boundaries from seed to seed — a data-dependent k would mint fresh
+    compiles on the warm path.
+
+    Slots are listed in ascending order — the order in which a scatter-add
+    (``segment_sum``) applies them — so an unrolled left-associated
+    gather+add over the k columns accumulates each vertex's messages in
+    exactly the float order of the sequential driver's ``segment_sum``
+    (core/bucketing.py uses this to replace the batched scatter, which XLA
+    CPU executes ~15× slower than k gathered adds).
+    """
+    dst = np.asarray(g.dst)
+    slots = np.nonzero(np.asarray(g.emask))[0]
+    d = dst[slots]
+    if d.size == 0:
+        return jnp.full((g.n_pad, k), g.m_pad, jnp.int32), k
+    counts = np.bincount(d, minlength=g.n_pad)
+    dmax = int(counts.max())
+    if dmax > k:
+        return None, dmax
+    order = np.argsort(d, kind="stable")        # stable: slots stay ascending
+    ds, ss = d[order], slots[order]
+    rank = np.arange(ds.size) - np.searchsorted(ds, ds, side="left")
+    inc = np.full((g.n_pad, k), g.m_pad, np.int64)
+    inc[ds, rank] = ss
+    return jnp.asarray(inc, jnp.int32), k
+
+
+@dataclasses.dataclass
+class PackedGraphs:
+    """B same-shape lanes stacked into one batched ``PaddedGraph``.
+
+    ``g`` holds ``[B, n_pad]`` / ``[B, m_pad]`` arrays (static n/m zeroed:
+    jitted consumers key on padded shapes only); ``b`` is the number of
+    REAL lanes — lanes b..B-1 are dead padding.
+    """
+    g: PaddedGraph
+    b: int
+
+    @property
+    def lanes(self) -> int:
+        return int(self.g.vmask.shape[0])
+
+    @property
+    def n_pad(self) -> int:
+        return int(self.g.vmask.shape[1])
+
+    @property
+    def m_pad(self) -> int:
+        return int(self.g.src.shape[1])
+
+
+def lane_bucket(b: int, minimum: int = 8) -> int:
+    """Pow2 batch bucket with a floor: straggler waves (a few hierarchies
+    one level deeper than the rest of the batch) reuse the floor-size
+    program instead of compiling a fresh B=1/2/4 variant."""
+    return bucket_pad(b, minimum)
+
+
+def pad_lanes(stacked, b: int, lanes: int, dead_value=None):
+    """Pad the batch axis of ``stacked`` ([b, ...]) to ``lanes`` rows by
+    replicating lane 0 (or ``dead_value``). Dead lanes run with iters=0 in
+    the batched step, so replication only keeps shapes/dtypes honest."""
+    if b == lanes:
+        return stacked
+    fill = stacked[0:1] if dead_value is None else dead_value
+    reps = jnp.concatenate([fill] * (lanes - b), axis=0)
+    return jnp.concatenate([stacked, reps], axis=0)
+
+
+def pack_graphs(gs: list[PaddedGraph], lanes: int | None = None
+                ) -> PackedGraphs:
+    """Stack same-shape graphs into a batched ``PaddedGraph`` (lane-padded
+    to ``lanes``; default = ``lane_bucket(len(gs))``)."""
+    assert gs, "pack_graphs needs at least one lane"
+    n_pad, m_pad = gs[0].n_pad, gs[0].m_pad
+    for g in gs:
+        assert (g.n_pad, g.m_pad) == (n_pad, m_pad), \
+            "pack_graphs: all lanes must share one shape bucket"
+    lanes = lanes if lanes is not None else lane_bucket(len(gs))
+    assert lanes >= len(gs)
+
+    def stack(field):
+        arr = jnp.stack([getattr(g, field) for g in gs], axis=0)
+        return pad_lanes(arr, len(gs), lanes)
+
+    batched = PaddedGraph(src=stack("src"), dst=stack("dst"),
+                          vmask=stack("vmask"), emask=stack("emask"),
+                          mass=stack("mass"), ewt=stack("ewt"), n=0, m=0)
+    return PackedGraphs(g=batched, b=len(gs))

@@ -5,10 +5,18 @@
 
 Runs pruning → coarsening → placement/refinement → reinsertion, reports the
 paper's quality metrics (CRE, NELD) + timing, optionally writes an SVG.
+
+``--many B`` instead lays out B seed-varied requests of the graph through
+the batched multi-graph driver (``multigila_layout_many``) — one vmapped
+device program per level wave — and reports graphs/sec;
+``--many-compare`` additionally runs the sequential single-graph driver
+over the same requests and checks per-graph bit-identity (DESIGN.md §9,
+benchmarks/many_bench.py for the measured suite).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
@@ -17,7 +25,7 @@ from repro.graphs import generators
 from repro.graphs.metrics import quality_report
 from repro.graphs.graph import build_graph
 from repro.graphs.io import save_svg
-from repro.core import multigila_layout, LayoutConfig
+from repro.core import multigila_layout, multigila_layout_many, LayoutConfig
 
 
 def main(argv=None):
@@ -34,6 +42,12 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--svg", default="")
     ap.add_argument("--no-cre", action="store_true")
+    ap.add_argument("--many", type=int, default=0, metavar="B",
+                    help="lay out B seed-varied requests through the "
+                         "batched multi-graph driver")
+    ap.add_argument("--many-compare", action="store_true",
+                    help="with --many: also run the sequential driver and "
+                         "check per-graph bit-identity")
     args = ap.parse_args(argv)
 
     edges, n, gargs = generators.from_cli(args.graph, args.args)
@@ -43,10 +57,32 @@ def main(argv=None):
                   if args.mesh else None)
     cfg = LayoutConfig(engine=args.engine, seed=args.seed,
                        mesh_shape=mesh_shape)
-    t0 = time.perf_counter()
-    pos, stats = multigila_layout(edges, n, cfg)
-    dt = time.perf_counter() - t0
-    print(f"levels={stats.levels} sizes={stats.level_sizes} time={dt:.2f}s")
+
+    if args.many > 0:
+        B = args.many
+        seeds = [args.seed + i for i in range(B)]
+        reqs = [(edges, n)] * B
+        t0 = time.perf_counter()
+        outs = multigila_layout_many(reqs, cfg, seeds=seeds)
+        dt = time.perf_counter() - t0
+        print(f"batched: {B} layouts in {dt:.2f}s = {B / dt:.2f} graphs/s "
+              f"(levels={outs[0][1].levels})")
+        if args.many_compare:
+            t0 = time.perf_counter()
+            seq = [multigila_layout(e, nn,
+                                    dataclasses.replace(cfg, seed=s))
+                   for (e, nn), s in zip(reqs, seeds)]
+            ds = time.perf_counter() - t0
+            same = all(np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+                       for a, b in zip(seq, outs))
+            print(f"sequential: {ds:.2f}s = {B / ds:.2f} graphs/s → "
+                  f"batched speedup {ds / dt:.2f}x, bit-identical={same}")
+        pos, stats = outs[0]
+    else:
+        t0 = time.perf_counter()
+        pos, stats = multigila_layout(edges, n, cfg)
+        dt = time.perf_counter() - t0
+        print(f"levels={stats.levels} sizes={stats.level_sizes} time={dt:.2f}s")
 
     g = build_graph(edges, n)
     rep = quality_report(g, np.pad(pos, ((0, g.n_pad - n), (0, 0))),

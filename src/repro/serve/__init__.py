@@ -1,10 +1,13 @@
 # Layout serving subsystem: a finished multilevel layout becomes a
 # queryable quadtree tile pyramid (tiles.py), persisted as npz shards
 # (store.py), served by a jitted batched viewport resolver (query.py)
-# behind a micro-batching front door (batcher.py). DESIGN.md §6.
+# behind a micro-batching front door (batcher.py). Whole-graph layout
+# requests get their own micro-batched front door (layout_service.py),
+# evaluated by the batched multi-graph driver. DESIGN.md §6, §9.
 from repro.serve.tiles import TileBand, TilePyramid, build_pyramid
 from repro.serve.store import (TileStore, save_pyramid, load_pyramid,
                                MANIFEST)
 from repro.serve.query import (QueryEngine, reference_resolve, trim_result,
                                band_for_zoom, MAX_TILES)
 from repro.serve.batcher import MicroBatcher
+from repro.serve.layout_service import LayoutService

@@ -1,11 +1,20 @@
-"""Micro-batching front door for viewport queries (DESIGN.md §6).
+"""Micro-batching front doors (DESIGN.md §6, §9).
 
-Concurrent callers submit single viewports; a collector thread coalesces
+Concurrent callers submit single requests; a collector thread coalesces
 everything that arrives within a deadline window (or up to ``max_batch``)
-into ONE batched device program — the same batched-prefill structure as
-``examples/serve_decode.py``, applied to query serving. Under load the
-window fills and per-request cost amortizes toward the batched
-throughput; an idle request pays at most the window.
+into ONE batched device program. Under load the window fills and
+per-request cost amortizes toward the batched throughput; an idle request
+pays at most the window.
+
+``_BatcherCore`` owns the engine-agnostic machinery (queue, deadline
+window, future lifecycle, shutdown races); subclasses supply ``_execute``
+— the batched evaluation. Two front doors ride on it:
+
+  * ``MicroBatcher`` — viewport queries against a ``QueryEngine`` (the
+    same batched-prefill structure as ``examples/serve_decode.py``,
+    applied to query serving);
+  * ``serve/layout_service.py:LayoutService`` — whole-graph layout
+    requests, coalesced into ``multigila_layout_many`` batches.
 """
 from __future__ import annotations
 
@@ -19,15 +28,12 @@ import numpy as np
 from repro.serve.query import QueryEngine, trim_result
 
 
-class MicroBatcher:
-    """Deadline-window request coalescing in front of a QueryEngine."""
+class _BatcherCore:
+    """Deadline-window request coalescing (engine-agnostic core)."""
 
-    def __init__(self, engine: QueryEngine, *, max_batch: int = 64,
-                 window_s: float = 0.002, trim: bool = True):
-        self.engine = engine
+    def __init__(self, *, max_batch: int = 64, window_s: float = 0.002):
         self.max_batch = max_batch
         self.window_s = window_s
-        self.trim = trim
         self.batches = 0
         self.requests = 0
         self._q: queue.Queue = queue.Queue()
@@ -38,16 +44,21 @@ class MicroBatcher:
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
 
-    def submit(self, box, zoom: int) -> Future:
-        """Enqueue one viewport; resolves to the (trimmed) query result."""
+    # -- subclass contract ---------------------------------------------------
+    def _execute(self, payloads: list) -> list:
+        """Evaluate one batch; returns one result per payload, in order."""
+        raise NotImplementedError
+
+    def _submit_payload(self, payload) -> Future:
+        """Enqueue one payload; resolves to ``_execute``'s per-item result."""
         fut: Future = Future()
         with self._lock:
             if self._closed:
                 raise RuntimeError("batcher is closed")
-            self._q.put((np.asarray(box, np.float32).reshape(4), int(zoom),
-                         fut))
+            self._q.put((payload, fut))
         return fut
 
+    # -- collector loop ------------------------------------------------------
     def _collect(self) -> list | None:
         """Block for the first request, then drain until deadline/max."""
         item = self._q.get()
@@ -78,22 +89,19 @@ class MicroBatcher:
             # (timeout wrappers) — completing a cancelled future would raise
             # InvalidStateError and kill this thread
             batch = [item for item in batch
-                     if item[2].set_running_or_notify_cancel()]
+                     if item[1].set_running_or_notify_cancel()]
             if not batch:
                 continue
-            boxes = np.stack([b for b, _, _ in batch])
-            zooms = np.asarray([z for _, z, _ in batch], np.int32)
             self.batches += 1
             self.requests += len(batch)
             try:
-                out = self.engine.query(boxes, zooms)
+                results = self._execute([p for p, _ in batch])
             except Exception as e:
-                for _, _, fut in batch:
+                for _, fut in batch:
                     fut.set_exception(e)
                 continue
-            for i, (_, _, fut) in enumerate(batch):
-                fut.set_result(trim_result(out, i) if self.trim
-                               else {k: v[i] for k, v in out.items()})
+            for (_, fut), res in zip(batch, results):
+                fut.set_result(res)
         self._drain()
 
     def _drain(self):
@@ -105,7 +113,7 @@ class MicroBatcher:
             except queue.Empty:
                 return
             if item is not None:
-                item[2].cancel()
+                item[1].cancel()
 
     def close(self):
         with self._lock:
@@ -115,3 +123,27 @@ class MicroBatcher:
             self._q.put(None)   # under the lock: nothing enqueues after it
         self._worker.join(timeout=30)
         self._drain()   # anything the worker left when the sentinel hit
+
+
+class MicroBatcher(_BatcherCore):
+    """Deadline-window viewport-query coalescing in front of a QueryEngine."""
+
+    def __init__(self, engine: QueryEngine, *, max_batch: int = 64,
+                 window_s: float = 0.002, trim: bool = True):
+        self.engine = engine
+        self.trim = trim
+        super().__init__(max_batch=max_batch, window_s=window_s)
+
+    def submit(self, box, zoom: int) -> Future:
+        """Enqueue one viewport; resolves to the (trimmed) query result."""
+        return self._submit_payload(
+            (np.asarray(box, np.float32).reshape(4), int(zoom)))
+
+    def _execute(self, payloads: list) -> list:
+        boxes = np.stack([b for b, _ in payloads])
+        zooms = np.asarray([z for _, z in payloads], np.int32)
+        out = self.engine.query(boxes, zooms)
+        if self.trim:
+            return [trim_result(out, i) for i in range(len(payloads))]
+        return [{k: v[i] for k, v in out.items()}
+                for i in range(len(payloads))]

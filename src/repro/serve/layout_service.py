@@ -1,0 +1,63 @@
+"""Layout-as-a-service front door: micro-batched multi-graph layout.
+
+The multi-tenant serving scenario the ROADMAP aims at: many users submit
+(small) graphs concurrently and each expects a finished drawing back. One
+``LayoutService`` owns a deadline-window collector (the ``_BatcherCore``
+machinery of serve/batcher.py) whose batches are evaluated by
+``core.multilevel.multigila_layout_many`` — so every window of concurrent
+requests shares ONE batched device program per level wave, and a warm
+process compiles nothing (core/bucketing.py). Per-request results are
+bit-identical to a dedicated single-graph ``multigila_layout`` call.
+
+    svc = LayoutService(LayoutConfig(seed=0))
+    futs = [svc.submit(edges_i, n_i) for ...]     # concurrent callers
+    pos, stats = futs[0].result()
+    svc.close()
+
+The default window (10 ms) is wider than the viewport-query batcher's:
+a layout costs 10⁴–10⁶× a tile lookup, so waiting a beat longer to fill
+the batch is always worth it.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.serve.batcher import _BatcherCore
+
+
+class LayoutService(_BatcherCore):
+    """Deadline-window coalescing of layout requests into batched drivers."""
+
+    def __init__(self, cfg=None, *, max_batch: int = 16,
+                 window_s: float = 0.010):
+        from repro.core import LayoutConfig
+        self.cfg = cfg or LayoutConfig()
+        super().__init__(max_batch=max_batch, window_s=window_s)
+
+    def submit(self, edges, n: int) -> Future:
+        """Enqueue one graph; resolves to ``(pos[n, 2], LayoutStats)``.
+
+        Validates the request HERE, not in the batch: requests coalesce
+        into shared driver calls, so one malformed graph would otherwise
+        fail (or, with negative ids wrapping, silently corrupt) every
+        request in its window.
+        """
+        e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        n = int(n)
+        if n < 1:
+            raise ValueError(f"n must be >= 1, got {n}")
+        if e.size and (e.min() < 0 or e.max() >= n):
+            raise ValueError(
+                f"edge endpoints must lie in [0, {n}), got "
+                f"[{e.min()}, {e.max()}]")
+        return self._submit_payload((e, n))
+
+    def layout(self, edges, n: int, timeout: float | None = None):
+        """Blocking convenience wrapper around ``submit``."""
+        return self.submit(edges, n).result(timeout)
+
+    def _execute(self, payloads: list) -> list:
+        from repro.core import multigila_layout_many
+        return multigila_layout_many(payloads, self.cfg)

@@ -42,6 +42,56 @@ def test_khop_cap_respected():
     assert mask.sum(axis=1).max() <= 16
 
 
+def _khop_reference(edges, n, k):
+    """Straightforward per-vertex BFS ball (no caps) — the content oracle
+    for the vectorized builder."""
+    adj = [set() for _ in range(n)]
+    for a, b in edges:
+        adj[a].add(int(b))
+        adj[b].add(int(a))
+    balls = []
+    for v in range(n):
+        seen, frontier = {v}, {v}
+        for _ in range(k):
+            frontier = set().union(*(adj[u] for u in frontier)) - seen \
+                if frontier else set()
+            seen |= frontier
+        balls.append(seen - {v})
+    return balls
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_khop_vectorized_matches_reference_contents(k):
+    """Parity-shaped regression for the vectorized (CSR-sliced) builder:
+    with cap ≥ the ball size, list CONTENTS equal the BFS k-hop ball
+    exactly — the old per-vertex-Python-loop semantics."""
+    e, n = G.gnp(70, 3.0, 9)
+    idx, mask = gila.khop_neighbors(e, n, k=k, cap=n)
+    balls = _khop_reference(e, n, k)
+    for v in range(n):
+        assert set(idx[v][mask[v]].tolist()) == balls[v], v
+
+
+def test_khop_sampled_lists_are_valid_and_deterministic():
+    """Under the cap, lists are a deterministic-in-seed subset of the true
+    k-hop ball, and hop-1 neighbors fill before anything else when they
+    fit (the expansion only tops up remaining room)."""
+    e, n = G.scale_free(250, 3, 1)
+    cap = 24
+    i1, m1 = gila.khop_neighbors(e, n, k=3, cap=cap, seed=7)
+    i2, m2 = gila.khop_neighbors(e, n, k=3, cap=cap, seed=7)
+    assert np.array_equal(i1, i2) and np.array_equal(m1, m2)
+    balls = _khop_reference(e, n, 3)
+    hop1 = _khop_reference(e, n, 1)
+    for v in range(n):
+        got = set(i1[v][m1[v]].tolist())
+        assert got <= balls[v]
+        assert len(got) == min(cap, len(got))
+        if len(hop1[v]) <= cap:
+            assert hop1[v] <= got, v      # direct neighbors never sampled out
+    assert m1.sum(axis=1).max() <= cap
+
+
 def test_exact_vs_neighbor_forces_agree_on_full_lists():
     """With cap ≥ n and k ≥ diameter, neighbor mode equals exact mode
     (minus the self term, which is zero anyway)."""

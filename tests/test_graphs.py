@@ -70,6 +70,34 @@ def test_crossings_match_bruteforce():
     assert M.count_crossings(pos, e) == brute(pos, e)
 
 
+def test_crossings_and_cre_canonicalize_duplicates():
+    """Regression: duplicated, reversed-duplicate and self-loop edges must
+    not inflate the crossing count or the CRE denominator — the metric
+    canonicalizes through the unique undirected edge set first."""
+    rng = np.random.default_rng(3)
+    e, n = G.gnp(30, 3.0, 4)
+    pos = rng.random((n, 2)).astype(np.float32)
+    base_x = M.count_crossings(pos, e)
+    base_cre = M.cre(pos, e)
+    assert base_x > 0          # non-degenerate instance
+    messy = np.concatenate([
+        e,                      # originals
+        e[:, ::-1],             # every edge reversed
+        e[:7],                  # straight duplicates
+        np.stack([np.arange(5), np.arange(5)], 1),   # self loops
+    ])
+    assert M.count_crossings(pos, messy) == base_x
+    assert M.cre(pos, messy) == base_cre
+
+
+def test_canonical_edges():
+    from repro.graphs.graph import canonical_edges
+    e = np.array([[3, 1], [1, 3], [1, 3], [2, 2], [0, 4]])
+    out = canonical_edges(e)
+    assert out.tolist() == [[0, 4], [1, 3]]
+    assert canonical_edges(np.zeros((0, 2), np.int64)).shape == (0, 2)
+
+
 def test_load_edgelist_streaming(tmp_path):
     from repro.graphs.io import load_edgelist, save_edgelist
     # comments (# and %), blank lines, a trailing weight column

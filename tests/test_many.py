@@ -1,0 +1,192 @@
+"""Batched multi-graph layout (core/multilevel.py:multigila_layout_many).
+
+Three contracts (DESIGN.md §9):
+  * PARITY — every graph of a batch gets BIT-IDENTICAL positions to the
+    sequential single-graph bucketed driver: B=1, homogeneous batches,
+    mixed-bucket batches (which must split into groups), disconnected
+    graphs, and the neighbor/grid refine modes;
+  * WARM PATH — a fresh same-bucket batch triggers ZERO new compiles
+    (``bucketing.cache_stats``);
+  * PLUMBING — lane re-padding rewrites sentinels correctly, the
+    incidence-gather aggregation is bitwise equal to ``segment_sum``, and
+    the ``LayoutService`` front door coalesces concurrent requests into
+    batched driver calls.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.graphs import generators as G, build_graph
+from repro.graphs.graph import unique_edges
+from repro.graphs import packing
+from repro.core import (LayoutConfig, multigila_layout,
+                        multigila_layout_many, bucketing)
+
+
+def _assert_parity(graphs, cfg, seeds=None):
+    outs = multigila_layout_many(graphs, cfg, seeds=seeds)
+    assert len(outs) == len(graphs)
+    for i, (e, n) in enumerate(graphs):
+        scfg = (cfg if seeds is None
+                else dataclasses.replace(cfg, seed=int(seeds[i])))
+        ps, ss = multigila_layout(e, n, scfg)
+        pb, sb = outs[i]
+        assert sb.levels == ss.levels
+        assert np.asarray(pb).shape == (n, 2)
+        assert np.array_equal(np.asarray(pb), np.asarray(ps)), f"graph {i}"
+    return outs
+
+
+def test_single_graph_batch_bit_identical():
+    _assert_parity([G.delaunay(150, 4)], LayoutConfig(seed=7))
+
+
+def test_homogeneous_batch_bit_identical():
+    gs = [G.delaunay(150, 10 + i) for i in range(4)]
+    _assert_parity(gs, LayoutConfig(seed=5))
+
+
+def test_mixed_bucket_batch_splits_into_groups():
+    """Graphs whose levels land in different lane buckets must still come
+    back bit-identical — the wave loop splits them into per-bucket groups
+    (one compiled program each)."""
+    gs = [G.delaunay(120, 3), G.delaunay(500, 4), G.grid(14, 14),
+          G.scale_free(200, 2, 5)]
+    keys = set()
+    for e, n in gs:
+        g0 = build_graph(e, n, bucket=True)
+        keys.add(bucketing.lane_shape(g0.n, g0.m))
+    assert len(keys) >= 2, "suite must actually span multiple lane buckets"
+    _assert_parity(gs, LayoutConfig(seed=2))
+
+
+def test_per_graph_seeds_and_disconnected_graph():
+    """Per-graph seed overrides behave like per-graph LayoutConfig.seed;
+    multi-component graphs go through per-component tasks + shelf packing
+    identically to the sequential driver."""
+    e1, n1 = G.delaunay(90, 1)
+    e2, n2 = G.delaunay(70, 2)
+    disc = (np.concatenate([e1, e2 + n1]), n1 + n2)
+    gs = [disc, G.delaunay(150, 3)]
+    _assert_parity(gs, LayoutConfig(seed=1), seeds=[11, 12])
+
+
+@pytest.mark.parametrize("kw", [dict(exact_threshold=64),
+                                dict(exact_threshold=64, grid_threshold=96)],
+                         ids=["neighbor-mode", "grid-mode"])
+def test_batched_neighbor_and_grid_modes(kw):
+    """The batched neighbor-list and grid refine steps are also
+    bit-identical (thresholds forced down so a 150-vertex graph exercises
+    them)."""
+    gs = [G.delaunay(150, 20 + i) for i in range(2)]
+    _assert_parity(gs, LayoutConfig(seed=4, **kw))
+
+
+def test_warm_path_zero_new_compiles():
+    """Acceptance: a fresh same-bucket batch reuses every compiled program
+    — no step-cache misses, no new jit trace entries."""
+    cfg = LayoutConfig(seed=6)
+    multigila_layout_many([G.delaunay(150, 70 + i) for i in range(3)], cfg)
+    before = bucketing.cache_stats()
+    assert before["jit_entries"] > 0, "jit cache probe broken"
+    outs = multigila_layout_many([G.delaunay(150, 80 + i) for i in range(3)],
+                                 cfg)
+    after = bucketing.cache_stats()
+    assert all(o[1].levels >= 2 for o in outs)
+    assert after["misses"] == before["misses"], (before, after)
+    assert after["jit_entries"] == before["jit_entries"], (before, after)
+    assert after["hits"] > before["hits"]
+
+
+def test_many_rejects_unsupported_configs():
+    g = [G.grid(6, 6)]
+    with pytest.raises(ValueError):
+        multigila_layout_many(g, LayoutConfig(engine="flat"))
+    with pytest.raises(ValueError):
+        multigila_layout_many(g, LayoutConfig(bucketing=False))
+    with pytest.raises(ValueError):
+        multigila_layout_many(g, LayoutConfig(), seeds=[1, 2])
+
+
+# -- packing plumbing ----------------------------------------------------------
+
+def test_repad_graph_rewrites_sentinels():
+    e, n = G.delaunay(60, 3)
+    g = build_graph(e, n, bucket=True)            # n_pad 256
+    g2 = packing.repad_graph(g, 64, 512)
+    assert (g2.n_pad, g2.m_pad) == (64, 512)
+    assert (g2.n, g2.m) == (g.n, g.m)
+    src = np.asarray(g2.src)
+    assert src[~np.asarray(g2.emask)].min() == 64          # new sentinel
+    assert np.array_equal(unique_edges(g2), unique_edges(g))
+    assert np.array_equal(np.asarray(g2.mass)[:n], np.asarray(g.mass)[:n])
+    # round trip back up
+    g3 = packing.repad_graph(g2, 256, g.m_pad)
+    assert np.array_equal(unique_edges(g3), unique_edges(g))
+
+
+def test_incidence_gather_bitwise_matches_segment_sum():
+    """The unrolled incidence-gather aggregation (the batched driver's
+    attraction) accumulates in exactly segment_sum's float order."""
+    e, n = G.delaunay(80, 5)
+    g = build_graph(e, n, bucket=True)
+    inc, k = packing.incidence_table(g, 32)
+    assert inc is not None and inc.shape == (g.n_pad, 32)
+    rng = np.random.default_rng(0)
+    vec = jnp.asarray(rng.standard_normal((g.m_pad, 2)).astype(np.float32))
+    vec = jnp.where(jnp.asarray(g.emask)[:, None], vec, 0.0)
+    seg = jax.ops.segment_sum(vec, g.dst, num_segments=g.n_pad + 1)[: g.n_pad]
+    vflat = jnp.concatenate([vec, jnp.zeros((1, 2), vec.dtype)], axis=0)
+    acc = jnp.zeros((g.n_pad, 2), jnp.float32)
+    for col in range(k):
+        acc = acc + vflat[inc[:, col]]
+    assert bool(jnp.all(acc == seg))
+
+
+def test_incidence_table_hub_fallback():
+    star = np.stack([np.zeros(40, np.int64),
+                     np.arange(1, 41, dtype=np.int64)], axis=1)
+    g = build_graph(star, 41, bucket=True)
+    inc, dmax = packing.incidence_table(g, 32)
+    assert inc is None and dmax == 40          # → flat-scatter path
+
+
+def test_lane_bucket_floor():
+    assert packing.lane_bucket(1) == 8
+    assert packing.lane_bucket(8) == 8
+    assert packing.lane_bucket(9) == 16
+    assert packing.lane_bucket(16) == 16
+    assert packing.lane_bucket(17) == 32
+
+
+# -- the service front door ----------------------------------------------------
+
+def test_layout_service_coalesces_and_matches():
+    from repro.serve import LayoutService
+    cfg = LayoutConfig(seed=2)
+    svc = LayoutService(cfg, max_batch=8, window_s=0.05)
+    try:
+        gs = [G.delaunay(100, 40 + i) for i in range(4)]
+        futs = [svc.submit(e, n) for e, n in gs]
+        res = [f.result(timeout=300) for f in futs]
+        for (e, n), (pos, stats) in zip(gs, res):
+            ps, ss = multigila_layout(e, n, cfg)
+            assert stats.levels == ss.levels
+            assert np.array_equal(np.asarray(pos), np.asarray(ps))
+        assert svc.requests == 4
+        assert svc.batches <= 4            # window coalescing happened at all
+        # malformed requests are rejected at submit(), never reaching the
+        # shared batch (one bad graph must not fail its whole window)
+        with pytest.raises(ValueError):
+            svc.submit(np.array([[0, 5]]), 3)
+        with pytest.raises(ValueError):
+            svc.submit(np.array([[-1, 2]]), 4)
+        with pytest.raises(ValueError):
+            svc.submit(np.zeros((0, 2)), 0)
+    finally:
+        svc.close()
+    with pytest.raises(RuntimeError):
+        svc.submit(*G.grid(4, 4))
