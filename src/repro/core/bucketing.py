@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.graphs.graph import PaddedGraph, bucket_pad
 from repro.graphs import packing
 from repro.core import gila
+from repro.utils.transfer import io_boundary
 
 
 def shape_normalized(g: PaddedGraph) -> PaddedGraph:
@@ -56,6 +57,19 @@ def shape_normalized(g: PaddedGraph) -> PaddedGraph:
 def donate_argnums_if_supported(*argnums: int) -> tuple:
     """Buffer donation is a no-op (plus a warning per call) on CPU."""
     return argnums if jax.default_backend() != "cpu" else ()
+
+
+def kernel_backend() -> str:
+    """The kernel backend ('pallas' | 'interpret' | 'ref') the NEXT trace
+    will bake in — the ``REPRO_PALLAS`` override or the platform default.
+
+    The kernel dispatchers read this ambient state at trace time, so it is
+    part of the compiled program and must be part of every compile-cache
+    key: an entry cached under one backend must not be served after the env
+    var changes mid-process (tools/gilalint rule R2 enforces this for any
+    new cache site)."""
+    from repro.kernels.grid_force.ops import backend_mode
+    return backend_mode()
 
 
 # -- per-phase wall-clock accounting ------------------------------------------
@@ -182,6 +196,29 @@ def _build_refine(mode: str, grid_dim: int, cell_cap: int):
     return jax.jit(refine, donate_argnums=donate_argnums_if_supported(0))
 
 
+def cached_refine(g: PaddedGraph, pos0, sched, nbr_idx, nbr_mask, *,
+                  ideal_len: float, rep_const: float, min_dist: float = 1e-3):
+    """(cache_key, fn, fresh, args) for one level's bucketed refine step.
+
+    The single place the single-graph refine key is derived and its
+    arguments staged — shared by the driver (``refine_level``) and the
+    jaxpr audit of tools/gilalint, so the audit traces exactly the program
+    the driver would run (gilalint R2 statically checks this call site).
+    """
+    key = ("refine", g.n_pad, g.m_pad, int(nbr_idx.shape[1]), sched.mode,
+           sched.grid_dim, sched.cell_cap, kernel_backend())
+    fn, fresh = STEP_CACHE.get(
+        key, lambda: _build_refine(sched.mode, sched.grid_dim, sched.cell_cap))
+    with io_boundary():                     # intentional host→device staging
+        params = jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32)
+        args = (jnp.asarray(pos0), g.src, g.dst, g.vmask, g.emask, g.mass,
+                g.ewt, nbr_idx, nbr_mask,
+                jnp.asarray(sched.iters, jnp.int32),
+                jnp.asarray(sched.temp0, jnp.float32),
+                jnp.asarray(sched.temp_decay, jnp.float32), params)
+    return key, fn, fresh, args
+
+
 def refine_level(g: PaddedGraph, pos0, sched, *, ideal_len: float,
                  rep_const: float, min_dist: float = 1e-3, seed: int = 0):
     """Bucketed drop-in for ``gila.gila_layout`` in the multilevel driver.
@@ -195,20 +232,16 @@ def refine_level(g: PaddedGraph, pos0, sched, *, ideal_len: float,
             nbr_idx, nbr_mask = gila.build_level_neighbors(
                 g, sched.k, sched.cap, seed=seed)
     else:
-        nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
-        nbr_mask = jnp.zeros((g.n_pad, 1), bool)
+        with io_boundary():
+            nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
+            nbr_mask = jnp.zeros((g.n_pad, 1), bool)
 
-    key = ("refine", g.n_pad, g.m_pad, int(nbr_idx.shape[1]), sched.mode,
-           sched.grid_dim, sched.cell_cap)
-    fn, fresh = STEP_CACHE.get(
-        key, lambda: _build_refine(sched.mode, sched.grid_dim, sched.cell_cap))
+    _, fn, fresh, args = cached_refine(g, pos0, sched, nbr_idx, nbr_mask,
+                                       ideal_len=ideal_len,
+                                       rep_const=rep_const, min_dist=min_dist)
 
-    params = jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32)
     t0 = time.perf_counter()
-    pos = fn(jnp.asarray(pos0), g.src, g.dst, g.vmask, g.emask, g.mass,
-             g.ewt, nbr_idx, nbr_mask, jnp.asarray(sched.iters, jnp.int32),
-             jnp.asarray(sched.temp0, jnp.float32),
-             jnp.asarray(sched.temp_decay, jnp.float32), params)
+    pos = fn(*args)
     pos.block_until_ready()
     PHASES.add("compile" if fresh else "refine", time.perf_counter() - t0)
     return pos
@@ -272,7 +305,8 @@ def make_request(g: PaddedGraph, pos0, sched, seed: int) -> RefineRequest:
     g2 = packing.repad_graph(g, n_pad, m_pad)
     inc, k = packing.incidence_table(g2, INC_K_MAX)
     if inc is None:               # hub-heavy lane: flat-scatter attraction
-        inc, k = jnp.zeros((n_pad, 0), jnp.int32), 0
+        with io_boundary():
+            inc, k = jnp.zeros((n_pad, 0), jnp.int32), 0
     return RefineRequest(g=g2, pos0=packing.repad_rows(pos0, n_pad),
                          sched=sched, seed=seed, inc=inc, inc_k=k)
 
@@ -402,6 +436,48 @@ def _build_refine_many(mode: str, grid_dim: int, cell_cap: int, inc_k: int):
                    donate_argnums=donate_argnums_if_supported(0))
 
 
+def cached_refine_many(reqs: list[RefineRequest], nbrs: list[tuple], *,
+                       ideal_len: float, rep_const: float,
+                       min_dist: float = 1e-3, lanes_min: int = 8):
+    """(cache_key, fn, fresh, args) for one batched shape-bucket group.
+
+    ``nbrs`` is the per-request (nbr_idx, nbr_mask) list (dummies for
+    non-neighbor modes). Shared by ``refine_level_many`` and the gilalint
+    jaxpr audit — the audit traces the production staging path (and
+    gilalint R2 statically checks this call site).
+    """
+    key0 = group_key(reqs[0])
+    assert all(group_key(r) == key0 for r in reqs), "mixed group"
+    sched0 = reqs[0].sched
+    b = len(reqs)
+    lanes = packing.lane_bucket(b, lanes_min)
+    packed = packing.pack_graphs([r.g for r in reqs], lanes=lanes)
+    with io_boundary():                     # intentional host→device staging
+        pl = lambda a: packing.pad_lanes(a, b, lanes)
+        pos0 = pl(jnp.stack([jnp.asarray(r.pos0) for r in reqs]))
+        nbr_idx = pl(jnp.stack([ni for ni, _ in nbrs]))
+        nbr_mask = pl(jnp.stack([nm for _, nm in nbrs]))
+        inc = pl(jnp.stack([r.inc for r in reqs]))
+        # dead lanes: iteration budget 0 — they ride through untouched
+        iters = jnp.asarray([r.sched.iters for r in reqs] + [0] * (lanes - b),
+                            jnp.int32)
+        temp0 = pl(jnp.asarray([r.sched.temp0 for r in reqs], jnp.float32))
+        decay = pl(jnp.asarray([r.sched.temp_decay for r in reqs],
+                               jnp.float32))
+        params = jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32)
+        max_iters = jnp.asarray(max(r.sched.iters for r in reqs), jnp.int32)
+
+    cache_key = ("refine_many", lanes, kernel_backend()) + key0
+    fn, fresh = STEP_CACHE.get(
+        cache_key,
+        lambda: _build_refine_many(sched0.mode, sched0.grid_dim,
+                                   sched0.cell_cap, reqs[0].inc_k))
+    args = (pos0, packed.g.src, packed.g.dst, packed.g.vmask, packed.g.emask,
+            packed.g.mass, packed.g.ewt, nbr_idx, nbr_mask, inc, iters,
+            temp0, decay, params, max_iters)
+    return cache_key, fn, fresh, args
+
+
 def refine_level_many(reqs: list[RefineRequest], *, ideal_len: float,
                       rep_const: float, min_dist: float = 1e-3,
                       lanes_min: int = 8) -> list[jnp.ndarray]:
@@ -411,10 +487,7 @@ def refine_level_many(reqs: list[RefineRequest], *, ideal_len: float,
     positions (lane-padded shape [n_pad, 2]), in request order.
     """
     assert reqs
-    key0 = group_key(reqs[0])
-    assert all(group_key(r) == key0 for r in reqs), "mixed group"
-    sched0 = reqs[0].sched
-    mode = sched0.mode
+    mode = reqs[0].sched.mode
 
     # per-lane neighbor lists (host build, same code path + seed as the
     # single-graph driver so the lists — and hence the forces — match)
@@ -428,35 +501,18 @@ def refine_level_many(reqs: list[RefineRequest], *, ideal_len: float,
                                                seed=r.seed)
                 nbrs.append(gila.pad_neighbors(idx, msk, r.g.n_pad))
     else:
-        z = (jnp.zeros((reqs[0].g.n_pad, 1), jnp.int32),
-             jnp.zeros((reqs[0].g.n_pad, 1), bool))
+        with io_boundary():
+            z = (jnp.zeros((reqs[0].g.n_pad, 1), jnp.int32),
+                 jnp.zeros((reqs[0].g.n_pad, 1), bool))
         nbrs = [z] * len(reqs)
 
-    b = len(reqs)
-    lanes = packing.lane_bucket(b, lanes_min)
-    packed = packing.pack_graphs([r.g for r in reqs], lanes=lanes)
-    pl = lambda a: packing.pad_lanes(a, b, lanes)
-    pos0 = pl(jnp.stack([jnp.asarray(r.pos0) for r in reqs]))
-    nbr_idx = pl(jnp.stack([ni for ni, _ in nbrs]))
-    nbr_mask = pl(jnp.stack([nm for _, nm in nbrs]))
-    inc = pl(jnp.stack([r.inc for r in reqs]))
-    # dead lanes: iteration budget 0 — they ride through untouched
-    iters = jnp.asarray([r.sched.iters for r in reqs] + [0] * (lanes - b),
-                        jnp.int32)
-    temp0 = pl(jnp.asarray([r.sched.temp0 for r in reqs], jnp.float32))
-    decay = pl(jnp.asarray([r.sched.temp_decay for r in reqs], jnp.float32))
-    params = jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32)
-    max_iters = jnp.asarray(max(r.sched.iters for r in reqs), jnp.int32)
-
-    cache_key = ("refine_many", lanes) + key0
-    fn, fresh = STEP_CACHE.get(
-        cache_key,
-        lambda: _build_refine_many(mode, sched0.grid_dim, sched0.cell_cap,
-                                   reqs[0].inc_k))
+    _, fn, fresh, args = cached_refine_many(
+        reqs, nbrs, ideal_len=ideal_len, rep_const=rep_const,
+        min_dist=min_dist, lanes_min=lanes_min)
     t0 = time.perf_counter()
-    out = fn(pos0, packed.g.src, packed.g.dst, packed.g.vmask, packed.g.emask,
-             packed.g.mass, packed.g.ewt, nbr_idx, nbr_mask, inc, iters,
-             temp0, decay, params, max_iters)
+    out = fn(*args)
     out.block_until_ready()
     PHASES.add("compile" if fresh else "refine", time.perf_counter() - t0)
-    return [out[i] for i in range(b)]
+    b = len(reqs)
+    with io_boundary():                     # egress: unpack the live lanes
+        return [out[i] for i in range(b)]

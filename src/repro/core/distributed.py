@@ -685,7 +685,7 @@ def cached_layout_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int, *,
     from repro.core import bucketing
 
     key = ("dist_step", _mesh_cache_key(mesh), n_pad, m_pad, cap, mode,
-           grid_dim, cell_cap)
+           grid_dim, cell_cap, bucketing.kernel_backend())
 
     def build():
         step, sh = layout_train_step(mesh, n_pad, m_pad, cap, mode=mode,
@@ -750,21 +750,27 @@ def run_layout_level(mesh: Mesh, g, pos0, sched, *, ideal_len: float,
                                            mode=sched.mode,
                                            grid_dim=sched.grid_dim,
                                            cell_cap=sched.cell_cap)
+    from repro.utils.transfer import io_boundary
+
     dput = jax.device_put
-    pos_d = dput(jnp.asarray(pos), sh["pos"])
-    w_d = dput(jnp.asarray(w), sh["w"])
-    nbr_d = dput(jnp.asarray(nbr), sh["nbr_idx"])
-    src_d = dput(jnp.asarray(src_e), sh["edge"])
-    dst_d = dput(jnp.asarray(dst_local), sh["edge"])
-    em_d = dput(jnp.asarray(emask), sh["edge"])
-    ew_d = dput(jnp.asarray(ewt), sh["edge"])
-    params = dput(jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32),
-                  sh["scalar"])
+    with io_boundary():                     # ingest: host partition → mesh
+        pos_d = dput(jnp.asarray(pos), sh["pos"])
+        w_d = dput(jnp.asarray(w), sh["w"])
+        nbr_d = dput(jnp.asarray(nbr), sh["nbr_idx"])
+        src_d = dput(jnp.asarray(src_e), sh["edge"])
+        dst_d = dput(jnp.asarray(dst_local), sh["edge"])
+        em_d = dput(jnp.asarray(emask), sh["edge"])
+        ew_d = dput(jnp.asarray(ewt), sh["edge"])
+        params = dput(
+            jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32),
+            sh["scalar"])
     temp = sched.temp0
     t0 = time.perf_counter()
     for it in range(sched.iters):
+        with io_boundary():                 # staging: cooling scalar
+            temp_d = dput(jnp.asarray(temp, jnp.float32), sh["scalar"])
         pos_d = jitted(pos_d, w_d, nbr_d, src_d, dst_d, em_d, ew_d, params,
-                       jnp.asarray(temp, jnp.float32))
+                       temp_d)
         if it == 0 and fresh:               # first call traces + compiles
             pos_d.block_until_ready()
             PHASES.add("compile", time.perf_counter() - t0)
@@ -772,5 +778,6 @@ def run_layout_level(mesh: Mesh, g, pos0, sched, *, ideal_len: float,
         temp *= sched.temp_decay
     pos_d.block_until_ready()
     PHASES.add("refine", time.perf_counter() - t0)
-    out = np.asarray(pos_d)[:g.n_pad]
+    with io_boundary():                     # egress: gather to host
+        out = np.asarray(pos_d)[:g.n_pad]
     return np.where(w[:g.n_pad, None] > 0, out, 0.0).astype(np.float32)

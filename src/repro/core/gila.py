@@ -255,10 +255,12 @@ def random_init(g: PaddedGraph, scale: float, seed: int = 0) -> jnp.ndarray:
     """Uniform initial positions, derived per-vertex (utils/prng.py) so the
     draw for a real vertex does not depend on the padding bucket."""
     from repro.utils.prng import uniform2_per_vertex
-    key = jax.random.PRNGKey(seed)
-    ids = jnp.arange(g.n_pad, dtype=jnp.int32)
-    pos = uniform2_per_vertex(key, ids, minval=-scale, maxval=scale)
-    return jnp.where(g.vmask[:, None], pos, 0.0)
+    from repro.utils.transfer import io_boundary
+    with io_boundary():                 # staging: seed + id table → device
+        key = jax.random.PRNGKey(seed)
+        ids = jnp.arange(g.n_pad, dtype=jnp.int32)
+        pos = uniform2_per_vertex(key, ids, minval=-scale, maxval=scale)
+        return jnp.where(g.vmask[:, None], pos, 0.0)
 
 
 def build_level_neighbors(g: PaddedGraph, k: int, cap: int, seed: int = 0

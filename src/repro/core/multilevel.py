@@ -28,6 +28,7 @@ from repro.core.solar_merger import run_merger, next_level, LevelInfo
 from repro.core.solar_placer import solar_placer
 from repro.core import gila, bucketing
 from repro.core.bucketing import PHASES
+from repro.utils.transfer import io_boundary
 from repro.core.schedule import make_schedule, LevelSchedule
 from repro.core.pruning import prune_degree_one, reinsert
 
@@ -161,10 +162,14 @@ def _layout_one_level(g: PaddedGraph, pos0, sched: LevelSchedule,
     else:
         # exact and grid modes need no neighbor lists (grid rebins inside
         # the iteration loop)
-        nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
-        nbr_mask = jnp.zeros((g.n_pad, 1), bool)
-    with PHASES.phase("refine"):            # exact-shape path: compile
-        pos = gila.gila_layout(             # time is inseparable here
+        with io_boundary():
+            nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
+            nbr_mask = jnp.zeros((g.n_pad, 1), bool)
+    # exact-shape path: compile time is inseparable here, and the jit call
+    # stages its python-scalar schedule knobs h2d at dispatch (the bucketed
+    # path stages them explicitly in cached_refine instead)
+    with PHASES.phase("refine"), io_boundary():
+        pos = gila.gila_layout(
             g, pos0, nbr_idx, nbr_mask, mode=sched.mode, iters=sched.iters,
             temp0=sched.temp0, temp_decay=sched.temp_decay,
             ideal_len=cfg.ideal_len, rep_const=cfg.rep_const,

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.graphs.graph import PaddedGraph, build_graph, edge_gather
 from repro.utils.prng import uniform_per_vertex
+from repro.utils.transfer import io_boundary
 
 UNASSIGNED, SUN, PLANET, MOON = 0, 1, 2, 3
 
@@ -49,12 +50,13 @@ class MergerState:
 
 def init_state(g: PaddedGraph) -> MergerState:
     n_pad = g.n_pad
-    return MergerState(
-        state=jnp.zeros((n_pad,), jnp.int32),
-        sun=jnp.full((n_pad,), n_pad, jnp.int32),
-        depth=jnp.full((n_pad,), -1, jnp.int32),
-        parent=jnp.full((n_pad,), n_pad, jnp.int32),
-    )
+    with io_boundary():                 # intentional host→device staging
+        return MergerState(
+            state=jnp.zeros((n_pad,), jnp.int32),
+            sun=jnp.full((n_pad,), n_pad, jnp.int32),
+            depth=jnp.full((n_pad,), -1, jnp.int32),
+            parent=jnp.full((n_pad,), n_pad, jnp.int32),
+        )
 
 
 def _push_max(g: PaddedGraph, values: jnp.ndarray) -> jnp.ndarray:
@@ -164,22 +166,27 @@ def run_merger(g: PaddedGraph, *, p_sun: float = 0.35, seed: int = 0,
     # them away: the jit caches key on padded shapes only, and every graph
     # in the same shape bucket reuses one compiled program (bucketing.py)
     gn = dataclasses.replace(g, n=0, m=0)
-    key = jax.random.PRNGKey(seed)
+    with io_boundary():                 # staging: RNG seed → device key
+        key = jax.random.PRNGKey(seed)
     prev_remaining = g.n + 1
     stalls = 0
     desperate = False
     for r in range(max_rounds):
-        key, sub = jax.random.split(key)
         # sticky desperation: once the vote stalls twice, run Luby-MIS-style
         # rounds (all unassigned candidates, existing suns not respected)
         # until convergence — O(log n) rounds with strict progress.
         desperate = desperate or stalls >= 2
-        forced = jnp.asarray(desperate or r % force_every == force_every - 1)
-        st = sun_election(gn, st, sub, jnp.asarray(p_sun, jnp.float32), forced,
-                          jnp.asarray(not desperate))
+        with io_boundary():             # staging: per-round scalar knobs
+            key, sub = jax.random.split(key)
+            forced = jnp.asarray(desperate
+                                 or r % force_every == force_every - 1)
+            p = jnp.asarray(p_sun, jnp.float32)
+            respect = jnp.asarray(not desperate)
+        st = sun_election(gn, st, sub, p, forced, respect)
         st = system_growth(gn, st)
         # BSP halting vote (host sync, as a Giraph aggregator would)
-        remaining = int(jnp.sum((st.state == UNASSIGNED) & g.vmask))
+        with io_boundary():
+            remaining = int(jnp.sum((st.state == UNASSIGNED) & g.vmask))
         if remaining == 0:
             return st
         stalls = 0 if remaining < prev_remaining else stalls + 1

@@ -18,6 +18,7 @@ import dataclasses
 from repro.graphs.graph import PaddedGraph, edge_gather
 from repro.core.solar_merger import LevelInfo, SUN
 from repro.utils.prng import uniform_per_vertex
+from repro.utils.transfer import io_boundary
 
 
 @jax.jit
@@ -67,17 +68,20 @@ def solar_placer(g: PaddedGraph, info: LevelInfo, coarse_pos: np.ndarray,
     n_pad = g.n_pad
     # route coarse positions to suns through the inter-level edges, then to
     # every member via its system-sun pointer.
-    coarse_pos = jnp.asarray(coarse_pos, jnp.float32)
-    pc = jnp.asarray(np.where(info.parent_coarse < 0, 0, info.parent_coarse))
-    member_sun_pos = coarse_pos[pc]           # [n_pad, 2] — pos of v's sun
-    sun_of = jnp.asarray(info.sun_of)
-    depth = jnp.asarray(np.maximum(info.depth, 0))
-    key = jax.random.PRNGKey(seed)
+    with io_boundary():                 # staging: level info → device
+        coarse_pos = jnp.asarray(coarse_pos, jnp.float32)
+        pc = jnp.asarray(np.where(info.parent_coarse < 0, 0,
+                                  info.parent_coarse))
+        member_sun_pos = coarse_pos[pc]       # [n_pad, 2] — pos of v's sun
+        sun_of = jnp.asarray(info.sun_of)
+        depth = jnp.asarray(np.maximum(info.depth, 0))
+        key = jax.random.PRNGKey(seed)
+        scatter = jnp.asarray(scatter_scale, jnp.float32)
+        is_sun = jnp.asarray(info.state == SUN) & g.vmask
     # normalize the static n/m fields so _place's jit cache keys on padded
     # shapes only (one compile per shape bucket, core/bucketing.py)
     pos = _place(dataclasses.replace(g, n=0, m=0), sun_of, depth,
-                 member_sun_pos, key, jnp.asarray(scatter_scale, jnp.float32))
+                 member_sun_pos, key, scatter)
     # suns sit exactly at their coarse position
-    is_sun = jnp.asarray(info.state == SUN) & g.vmask
     pos = jnp.where(is_sun[:, None], member_sun_pos, pos)
     return pos

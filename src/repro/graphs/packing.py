@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.graph import PaddedGraph, bucket_pad
+from repro.utils.transfer import io_boundary
 
 
 def repad_graph(g: PaddedGraph, n_pad: int, m_pad: int) -> PaddedGraph:
@@ -63,10 +64,11 @@ def repad_graph(g: PaddedGraph, n_pad: int, m_pad: int) -> PaddedGraph:
     vmask[: g.n] = np.asarray(g.vmask)[: g.n]
     mass = np.zeros((n_pad,), np.float32)
     mass[: g.n] = np.asarray(g.mass)[: g.n]
-    return PaddedGraph(src=jnp.asarray(src), dst=jnp.asarray(dst),
-                       vmask=jnp.asarray(vmask), emask=jnp.asarray(emask),
-                       mass=jnp.asarray(mass), ewt=jnp.asarray(ewt),
-                       n=g.n, m=g.m)
+    with io_boundary():                 # intentional host→device staging
+        return PaddedGraph(src=jnp.asarray(src), dst=jnp.asarray(dst),
+                           vmask=jnp.asarray(vmask), emask=jnp.asarray(emask),
+                           mass=jnp.asarray(mass), ewt=jnp.asarray(ewt),
+                           n=g.n, m=g.m)
 
 
 def repad_rows(a, n_pad: int):
@@ -74,13 +76,14 @@ def repad_rows(a, n_pad: int):
     rows. Rows past the valid count are padding — their values never reach
     a real vertex (masks/zero weights), so slicing them off or appending
     zeros is behavior-preserving."""
-    a = jnp.asarray(a)
-    if a.shape[0] == n_pad:
-        return a
-    if a.shape[0] > n_pad:
-        return a[:n_pad]
-    pad = [(0, n_pad - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
-    return jnp.pad(a, pad)
+    with io_boundary():                 # intentional host→device staging
+        a = jnp.asarray(a)
+        if a.shape[0] == n_pad:
+            return a
+        if a.shape[0] > n_pad:
+            return a[:n_pad]
+        pad = [(0, n_pad - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, pad)
 
 
 def incidence_table(g: PaddedGraph, k: int = 32
@@ -106,7 +109,8 @@ def incidence_table(g: PaddedGraph, k: int = 32
     slots = np.nonzero(np.asarray(g.emask))[0]
     d = dst[slots]
     if d.size == 0:
-        return jnp.full((g.n_pad, k), g.m_pad, jnp.int32), k
+        with io_boundary():
+            return jnp.full((g.n_pad, k), g.m_pad, jnp.int32), k
     counts = np.bincount(d, minlength=g.n_pad)
     dmax = int(counts.max())
     if dmax > k:
@@ -116,7 +120,8 @@ def incidence_table(g: PaddedGraph, k: int = 32
     rank = np.arange(ds.size) - np.searchsorted(ds, ds, side="left")
     inc = np.full((g.n_pad, k), g.m_pad, np.int64)
     inc[ds, rank] = ss
-    return jnp.asarray(inc, jnp.int32), k
+    with io_boundary():                 # intentional host→device staging
+        return jnp.asarray(inc, jnp.int32), k
 
 
 @dataclasses.dataclass
@@ -156,9 +161,10 @@ def pad_lanes(stacked, b: int, lanes: int, dead_value=None):
     the batched step, so replication only keeps shapes/dtypes honest."""
     if b == lanes:
         return stacked
-    fill = stacked[0:1] if dead_value is None else dead_value
-    reps = jnp.concatenate([fill] * (lanes - b), axis=0)
-    return jnp.concatenate([stacked, reps], axis=0)
+    with io_boundary():                 # intentional host→device staging
+        fill = stacked[0:1] if dead_value is None else dead_value
+        reps = jnp.concatenate([fill] * (lanes - b), axis=0)
+        return jnp.concatenate([stacked, reps], axis=0)
 
 
 def pack_graphs(gs: list[PaddedGraph], lanes: int | None = None

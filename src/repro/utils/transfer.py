@@ -1,0 +1,39 @@
+"""Explicit device↔host transfer boundaries.
+
+The hot path of the multilevel driver is a loop of cached jitted steps
+whose operands already live on device; an *implicit* transfer inside that
+loop (a numpy array silently staged per call, a Python scalar re-uploaded
+per iteration, a stray ``float(x)`` sync) is a performance bug that CPU
+testing never surfaces. Tier-1 hot-path tests therefore run under
+``no_implicit_transfers()`` (= ``jax.transfer_guard("disallow")``), which
+turns any implicit transfer into an error — and every INTENTIONAL staging
+or egress region in the drivers is marked with ``io_boundary()`` so the
+reader (and the guard) can tell deliberate I/O from an accident.
+
+Rule of thumb: ``io_boundary()`` belongs at the edges of a driver — graph
+ingest, per-level argument staging, final position egress — never inside
+the per-iteration loop body. tools/gilalint's R3 rule covers the traced
+side of the same invariant (no host syncs inside step functions).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def io_boundary():
+    """Context marking an intentional host↔device staging/egress region.
+
+    Inside, transfers behave as normal (``transfer_guard("allow")``), even
+    when an enclosing scope — e.g. the tier-1 test harness — disallows
+    implicit transfers.
+    """
+    return jax.transfer_guard("allow")
+
+
+def no_implicit_transfers():
+    """Context under which any implicit device↔host transfer raises.
+
+    Explicit transfers (``jax.device_put``, ``jax.device_get``) stay
+    allowed, as do regions wrapped in ``io_boundary()``.
+    """
+    return jax.transfer_guard("disallow")

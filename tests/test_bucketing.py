@@ -18,6 +18,17 @@ from repro.graphs import generators as G, build_graph
 from repro.graphs.graph import bucket_pad
 from repro.core import (multigila_layout, LayoutConfig, build_hierarchy,
                         run_merger, gila, bucketing)
+from repro.utils.transfer import io_boundary, no_implicit_transfers
+
+
+@pytest.fixture(autouse=True)
+def _no_implicit_transfers():
+    """The whole hot path runs under jax.transfer_guard("disallow"): every
+    intentional host<->device hop in the drivers is wrapped in
+    utils/transfer.io_boundary(); any bare transfer is a bug this guard
+    (and gilalint R3) exists to catch."""
+    with no_implicit_transfers():
+        yield
 
 
 PARITY_GRAPHS = [
@@ -91,10 +102,13 @@ def test_padding_invariance_of_init_forces_and_merger():
     np.testing.assert_allclose(np.asarray(pos1)[:n], np.asarray(pos2)[:n],
                                atol=1e-6)
 
-    params = jnp.asarray([1.0, 1.0, 1e-3], jnp.float32)
-    dummy = (jnp.zeros((g1.n_pad, 1), jnp.int32), jnp.zeros((g1.n_pad, 1), bool))
+    with io_boundary():                 # test-side staging
+        params = jnp.asarray([1.0, 1.0, 1e-3], jnp.float32)
+        dummy = (jnp.zeros((g1.n_pad, 1), jnp.int32),
+                 jnp.zeros((g1.n_pad, 1), bool))
+        dummy2 = (jnp.zeros((g2.n_pad, 1), jnp.int32),
+                  jnp.zeros((g2.n_pad, 1), bool))
     f1 = gila.gila_forces(g1, pos1, *dummy, params, mode="exact")
-    dummy2 = (jnp.zeros((g2.n_pad, 1), jnp.int32), jnp.zeros((g2.n_pad, 1), bool))
     f2 = gila.gila_forces(g2, pos2, *dummy2, params, mode="exact")
     np.testing.assert_allclose(np.asarray(f1)[:n], np.asarray(f2)[:n],
                                atol=1e-5)

@@ -354,7 +354,9 @@ def test_multigila_dist_engine_end_to_end():
         s0, s1 = sampled_stress(p0, edges, n), sampled_stress(pos, edges, n)
         assert s1 < s0 * 0.5, (s0, s1)
         print("OK", stats.levels, s0, s1)
-    """)
+    """, extra_env={"JAX_TRANSFER_GUARD": "disallow"})
+    # the guard proves the sharded hot path does no implicit host<->device
+    # hops: every intentional one sits in a utils/transfer.io_boundary()
     assert "OK" in out
 
 

@@ -1,0 +1,120 @@
+"""gilalint self-tests: per-rule fixtures, jaxpr-audit smoke, and the
+empty-baseline / clean-tree regressions that make the CI gate meaningful."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tools" / "gilalint" / "fixtures"
+MESH_AXES = {"data", "model", "pod"}
+
+sys.path.insert(0, str(REPO))            # import tools.* from the repo root
+
+from tools.gilalint.rules import lint_paths                     # noqa: E402
+from tools.gilalint.report import load_baseline                 # noqa: E402
+
+
+# -- layer 1: per-rule fixtures ------------------------------------------------
+
+@pytest.mark.parametrize("rule", ["R1", "R2", "R3", "R4", "R5", "R6"])
+def test_rule_fires_on_bad_fixture_only(rule):
+    bad = FIXTURES / f"{rule.lower()}_bad.py"
+    good = FIXTURES / f"{rule.lower()}_good.py"
+    bad_findings = lint_paths([str(bad)], mesh_axes=MESH_AXES)
+    good_findings = lint_paths([str(good)], mesh_axes=MESH_AXES)
+    assert bad_findings, f"{rule}: seeded violation not detected"
+    assert {f.rule for f in bad_findings} == {rule}, bad_findings
+    assert all(f.hint for f in bad_findings)
+    assert good_findings == [], good_findings
+
+
+def test_r2_distinguishes_ambient_from_free_name():
+    findings = lint_paths([str(FIXTURES / "r2_bad.py")])
+    msgs = "\n".join(f.message for f in findings)
+    assert "backend component" in msgs      # ambient os.environ read unkeyed
+    assert "closes over 'cell_cap'" in msgs  # static not in the key tuple
+
+
+def test_r5_needs_declared_axes():
+    # without an axis universe only the arity check can fire
+    findings = lint_paths([str(FIXTURES / "r5_bad.py")])
+    assert len(findings) == 1 and "2 entries" in findings[0].message
+    findings = lint_paths([str(FIXTURES / "r5_bad.py")], mesh_axes=MESH_AXES)
+    assert len(findings) == 2
+
+
+# -- the repo's own tree + baseline --------------------------------------------
+
+def test_repo_tree_is_clean():
+    """src/repro carries zero findings — satellite 1's contract. Any new
+    finding must be FIXED, not baselined (see next test)."""
+    findings = lint_paths([str(REPO / "src" / "repro")], repo_root=REPO)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_baseline_ships_empty():
+    path = REPO / "tools" / "gilalint" / "baseline.json"
+    assert json.loads(path.read_text()) == []
+    assert load_baseline(path) == set()
+
+
+def test_cli_fails_on_seeded_violation():
+    """The acceptance check: the exact CI command exits non-zero on a tree
+    containing a seeded violation, zero on a clean one."""
+    env = dict(os.environ, PYTHONPATH=f"{REPO}/src:{REPO}")
+    run = lambda target: subprocess.run(
+        [sys.executable, "-m", "tools.gilalint", target, "--no-audit"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=120)
+    bad = run(str(FIXTURES / "r2_bad.py"))
+    assert bad.returncode == 1 and "R2" in bad.stdout
+    good = run(str(FIXTURES / "r2_good.py"))
+    assert good.returncode == 0, good.stdout + good.stderr
+
+
+# -- layer 2: jaxpr audit ------------------------------------------------------
+
+def test_audit_checks_on_toy_step():
+    """The audit's program checks, demonstrated on toy jitted steps: a
+    callback primitive trips A1, and donation detection tells a donating
+    jit from a plain one."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from tools.gilalint.jaxpr_audit import _check_program, _donates_arg0
+
+    spec = jax.ShapeDtypeStruct((4,), jnp.float32)
+
+    failures = []
+    clean = jax.make_jaxpr(jax.jit(lambda x: x * 2.0))(spec)
+    _check_program("toy", clean, failures)
+    assert failures == []
+
+    def hostful(x):
+        return jax.pure_callback(
+            np.sin, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    dirty = jax.make_jaxpr(jax.jit(hostful))(spec)
+    _check_program("toy", dirty, failures)
+    assert [f["rule"] for f in failures] == ["A1"]
+
+    assert _donates_arg0(jax.jit(lambda x, y: x + y, donate_argnums=(0,)),
+                         spec, spec)
+    assert not _donates_arg0(jax.jit(lambda x, y: x + y), spec, spec)
+
+
+def test_full_audit_covers_three_families_and_passes():
+    """run_audit() traces the three production cached-step families and
+    finds nothing — the in-process equivalent of CI's audit half."""
+    from tools.gilalint.jaxpr_audit import run_audit
+
+    report = run_audit()
+    fams = report["families"]
+    assert set(fams) == {"refine_single", "refine_many", "dist_step"}
+    for name, fam in fams.items():
+        assert fam["failures"] == [], (name, fam["failures"])
+        assert fam["entry"], name

@@ -24,6 +24,15 @@ from repro.graphs.graph import unique_edges
 from repro.graphs import packing
 from repro.core import (LayoutConfig, multigila_layout,
                         multigila_layout_many, bucketing)
+from repro.utils.transfer import io_boundary, no_implicit_transfers
+
+
+@pytest.fixture(autouse=True)
+def _no_implicit_transfers():
+    """Hot-path tests run under jax.transfer_guard("disallow"); see the
+    twin fixture in tests/test_bucketing.py."""
+    with no_implicit_transfers():
+        yield
 
 
 def _assert_parity(graphs, cfg, seeds=None):
@@ -136,14 +145,19 @@ def test_incidence_gather_bitwise_matches_segment_sum():
     inc, k = packing.incidence_table(g, 32)
     assert inc is not None and inc.shape == (g.n_pad, 32)
     rng = np.random.default_rng(0)
-    vec = jnp.asarray(rng.standard_normal((g.m_pad, 2)).astype(np.float32))
-    vec = jnp.where(jnp.asarray(g.emask)[:, None], vec, 0.0)
-    seg = jax.ops.segment_sum(vec, g.dst, num_segments=g.n_pad + 1)[: g.n_pad]
-    vflat = jnp.concatenate([vec, jnp.zeros((1, 2), vec.dtype)], axis=0)
-    acc = jnp.zeros((g.n_pad, 2), jnp.float32)
-    for col in range(k):
-        acc = acc + vflat[inc[:, col]]
-    assert bool(jnp.all(acc == seg))
+    with io_boundary():                 # eager op-by-op reference: every
+        # primitive stages its scalar constants h2d, so the whole
+        # computation is an intentional boundary (the production path runs
+        # the same aggregation inside one jitted step)
+        vec = jnp.asarray(rng.standard_normal((g.m_pad, 2)).astype(np.float32))
+        vec = jnp.where(jnp.asarray(g.emask)[:, None], vec, 0.0)
+        seg = jax.ops.segment_sum(vec, g.dst,
+                                  num_segments=g.n_pad + 1)[: g.n_pad]
+        vflat = jnp.concatenate([vec, jnp.zeros((1, 2), vec.dtype)], axis=0)
+        acc = jnp.zeros((g.n_pad, 2), jnp.float32)
+        for col in range(k):
+            acc = acc + vflat[inc[:, col]]
+        assert bool(jnp.all(acc == seg))
 
 
 def test_incidence_table_hub_fallback():

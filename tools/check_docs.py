@@ -1,11 +1,13 @@
-"""Docs-consistency check (CI): every Markdown file referenced from the
-source tree must exist.
+"""Docs-consistency check (CI), two directions:
 
-Scans ``src/**/*.py`` (docstrings + comments + string literals) for
-references to Markdown files and resolves each against the repo root, the
-source roots, and the referencing file's own directory. Fails listing the
-dangling references — this is what keeps citations like "DESIGN.md §4.3"
-honest.
+1. every Markdown file referenced from ``src/**/*.py`` (docstrings,
+   comments, string literals) must exist — keeps citations like
+   "DESIGN.md §4.3" honest;
+2. every backticked code reference in DESIGN.md / EXPERIMENTS.md —
+   ``core/multilevel.py:multigila_layout_many`` file:symbol style or
+   ``graphs.graph.bucket_pad`` dotted style — must resolve to a real file
+   and a top-level symbol in it (checked via AST, no imports), so the
+   docs cannot drift from a rename.
 
     python tools/check_docs.py
 
@@ -13,12 +15,20 @@ Paths under results/ are generated outputs, not docs, and are skipped.
 """
 from __future__ import annotations
 
+import ast
 import pathlib
 import re
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 MD_REF = re.compile(r"[\w][\w./-]*\.md\b")
+CODE_SPAN = re.compile(r"`([^`\n]+)`")
+FILE_REF = re.compile(r"^([\w][\w/.-]*\.py)(?::([A-Za-z_]\w*))?$")
+DOTTED_REF = re.compile(r"^[a-z_][\w]*(\.[A-Za-z_]\w*){1,4}$")
+# directories a dotted reference may start from (module search roots)
+DOC_ROOTS = [REPO, REPO / "src", REPO / "src" / "repro",
+             REPO / "src" / "repro" / "kernels"]
+CHECKED_DOCS = ["DESIGN.md", "EXPERIMENTS.md"]
 
 
 def references(py: pathlib.Path) -> set[str]:
@@ -36,16 +46,97 @@ def resolves(ref: str, py: pathlib.Path) -> bool:
     return any((b / ref).is_file() for b in bases)
 
 
+def _top_level_names(py: pathlib.Path) -> set[str]:
+    """Top-level def/class/assignment names of a module (AST, no import)."""
+    tree = ast.parse(py.read_text(encoding="utf-8"))
+    names: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            names |= {t.id for t in node.targets if isinstance(t, ast.Name)}
+        elif isinstance(node, ast.AnnAssign) \
+                and isinstance(node.target, ast.Name):
+            names.add(node.target.id)
+        elif isinstance(node, ast.ImportFrom):
+            names |= {(a.asname or a.name) for a in node.names}
+    return names
+
+
+def _module_file(parts: list[str]) -> pathlib.Path | None:
+    for root in DOC_ROOTS:
+        as_mod = root.joinpath(*parts).with_suffix(".py")
+        if as_mod.is_file():
+            return as_mod
+        as_pkg = root.joinpath(*parts) / "__init__.py"
+        if as_pkg.is_file():
+            return as_pkg
+    return None
+
+
+def check_code_ref(ref: str) -> str | None:
+    """None if ``ref`` resolves (or is not a code reference at all);
+    otherwise a reason string."""
+    m = FILE_REF.match(ref)
+    if m:
+        path, symbol = m.groups()
+        for root in DOC_ROOTS:
+            f = root / path
+            if f.is_file():
+                if symbol and symbol not in _top_level_names(f):
+                    return f"no top-level '{symbol}' in {path}"
+                return None
+        return "file not found"
+    if not DOTTED_REF.match(ref):
+        return None                        # prose/jnp.float32/etc — skip
+    parts = ref.split(".")
+    # only audit dotted refs anchored at a real source dir/module — this
+    # is what keeps `np.random` or `time.perf_counter` out of scope
+    if not any((r / parts[0]).is_dir() or (r / f"{parts[0]}.py").is_file()
+               for r in DOC_ROOTS):
+        return None
+    if _module_file(parts) is not None:    # whole ref is a module
+        return None
+    mod = _module_file(parts[:-1])
+    if mod is not None:
+        if parts[-1] in _top_level_names(mod):
+            return None
+        return f"no top-level '{parts[-1]}' in {mod.relative_to(REPO)}"
+    return "module not found"
+
+
+def doc_code_refs() -> list[tuple[str, str, str]]:
+    """(doc, ref, reason) for every dangling code reference in the docs."""
+    bad = []
+    for name in CHECKED_DOCS:
+        doc = REPO / name
+        if not doc.is_file():
+            continue
+        for ref in sorted(set(CODE_SPAN.findall(
+                doc.read_text(encoding="utf-8")))):
+            reason = check_code_ref(ref.strip())
+            if reason is not None:
+                bad.append((name, ref, reason))
+    return bad
+
+
 def main() -> int:
     missing = []
     for py in sorted((REPO / "src").rglob("*.py")):
         for ref in sorted(references(py)):
             if not resolves(ref, py):
                 missing.append((py.relative_to(REPO), ref))
+    bad_code = doc_code_refs()
     if missing:
         print("dangling Markdown references:")
         for py, ref in missing:
             print(f"  {py}: {ref}")
+    if bad_code:
+        print("dangling code references in docs:")
+        for doc, ref, reason in bad_code:
+            print(f"  {doc}: `{ref}` — {reason}")
+    if missing or bad_code:
         return 1
     print("docs consistency OK")
     return 0

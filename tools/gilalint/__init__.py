@@ -1,0 +1,23 @@
+"""gilalint — JAX-aware static analysis enforcing the repo's compile,
+padding, and RNG invariants (DESIGN.md §10).
+
+Two layers:
+
+  * ``rules``       — AST lint over source trees (R1–R6), no execution;
+  * ``jaxpr_audit`` — abstract-tracing audit of every registered cached
+                      step family (single / distributed / many): no host
+                      callbacks, no f64, donation applied to the position
+                      buffer, padding-invariant cache keys + jaxprs.
+
+Run as a CI gate::
+
+    python -m tools.gilalint src/repro
+
+Exit code 0 ⟺ zero findings beyond the checked-in baseline (which ships —
+and must stay — empty: real findings get fixed, not suppressed) and a clean
+jaxpr audit.
+"""
+from tools.gilalint.report import Finding, load_baseline, render_text
+from tools.gilalint.rules import lint_paths
+
+__all__ = ["Finding", "lint_paths", "load_baseline", "render_text"]

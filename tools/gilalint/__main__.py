@@ -1,0 +1,79 @@
+"""CLI: ``python -m tools.gilalint src/repro [--json out.json] [--no-audit]``.
+
+Exit code 0 ⟺ zero non-baselined AST findings and a clean jaxpr audit.
+The checked-in baseline (tools/gilalint/baseline.json) ships empty and a
+regression test keeps it that way — the CI gate therefore fails on ANY
+finding.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="gilalint", description=__doc__)
+    ap.add_argument("paths", nargs="+", help="files/directories to lint")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the full JSON report here")
+    ap.add_argument("--no-audit", action="store_true",
+                    help="skip the jaxpr audit (AST lint only, no jax)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline file (default: the checked-in one)")
+    args = ap.parse_args(argv)
+
+    here = pathlib.Path(__file__).resolve().parent
+    repo_root = here.parent.parent
+    baseline_path = pathlib.Path(args.baseline) if args.baseline \
+        else here / "baseline.json"
+
+    from tools.gilalint.report import load_baseline, render_text
+    from tools.gilalint.rules import lint_paths
+
+    findings = lint_paths(args.paths, repo_root=repo_root)
+    baseline = load_baseline(baseline_path)
+    fresh = [f for f in findings if f.fingerprint not in baseline]
+
+    report = {
+        "paths": [str(p) for p in args.paths],
+        "findings": [f.to_dict() for f in fresh],
+        "baselined": len(findings) - len(fresh),
+        "audit": None,
+    }
+
+    audit_failures = []
+    if not args.no_audit:
+        # the distributed family shards over every visible device; give the
+        # in-process CPU a few before jax initializes
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            "--xla_force_host_platform_device_count=8")
+        from tools.gilalint.jaxpr_audit import run_audit
+        audit = run_audit()
+        report["audit"] = audit
+        audit_failures = [f for fam in audit["families"].values()
+                          for f in fam["failures"]]
+
+    if args.json_out:
+        pathlib.Path(args.json_out).write_text(
+            json.dumps(report, indent=2, sort_keys=True) + "\n",
+            encoding="utf-8")
+
+    if fresh:
+        print(render_text(fresh))
+    if audit_failures:
+        for f in audit_failures:
+            print(f"<jaxpr audit> {f['rule']}: {f['message']}")
+    n_fam = len(report["audit"]["families"]) if report["audit"] else 0
+    print(f"gilalint: {len(fresh)} finding(s), "
+          f"{report['baselined']} baselined, "
+          f"{len(audit_failures)} audit failure(s) "
+          f"across {n_fam} cached-step families")
+    return 1 if (fresh or audit_failures) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+"""Seeded-violation fixtures for tests/test_gilalint.py.
+
+Each ``rN_bad.py`` contains the smallest program that must trip rule N;
+each ``rN_good.py`` is the idiomatic counterpart that must stay clean.
+These files are test data — they are never imported, only parsed by the
+linter (and ``python -m tools.gilalint`` on a bad fixture is the CI
+fail-on-seeded-violation check).
+"""

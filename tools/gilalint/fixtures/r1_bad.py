@@ -1,0 +1,9 @@
+"""R1 positive: host-stateful randomness inside a jitted step."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    noise = np.random.normal(size=3)       # nondeterministic at trace time
+    return x + noise.sum()

@@ -1,0 +1,14 @@
+"""R1 negative: randomness routed through explicit fold-in streams."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(key, x):
+    noise = jax.random.normal(key, x.shape)
+    return x + noise
+
+
+def host_setup(seed):
+    # host-side, never traced: stateful numpy RNG is fine here
+    return np.random.default_rng(seed).normal(size=3)

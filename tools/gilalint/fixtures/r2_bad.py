@@ -1,0 +1,39 @@
+"""R2 positives: under-keyed compile-cache entries.
+
+``cached_ambient``: the builder's trace reads ambient config (os.environ)
+but the key has no backend component. ``cached_free``: the builder closes
+over a static that never reaches the key tuple.
+"""
+import os
+
+from repro.core.bucketing import CompileCache
+
+CACHE = CompileCache()
+
+
+def backend():
+    return os.environ.get("REPRO_PALLAS", "auto")
+
+
+def build(mode):
+    def fn(x):
+        return x if mode == "exact" and backend() else x
+    return fn
+
+
+def build2(mode, cell_cap):
+    def fn(x):
+        return x[:cell_cap] if mode else x
+    return fn
+
+
+def cached_ambient(n_pad, mode):
+    key = ("step", n_pad, mode)
+    fn, fresh = CACHE.get(key, lambda: build(mode))
+    return fn, fresh
+
+
+def cached_free(n_pad, mode, cell_cap):
+    key = ("step2", n_pad, mode, backend())
+    fn, fresh = CACHE.get(key, lambda: build2(mode, cell_cap))
+    return fn, fresh

@@ -1,0 +1,23 @@
+"""R2 negative: every builder input — including the ambient backend read —
+appears in the cache key."""
+import os
+
+from repro.core.bucketing import CompileCache
+
+CACHE = CompileCache()
+
+
+def backend():
+    return os.environ.get("REPRO_PALLAS", "auto")
+
+
+def build(mode, cell_cap):
+    def fn(x):
+        return x[:cell_cap] if mode == "exact" and backend() else x
+    return fn
+
+
+def cached(n_pad, mode, cell_cap):
+    key = ("step", n_pad, mode, cell_cap, backend())
+    fn, fresh = CACHE.get(key, lambda: build(mode, cell_cap))
+    return fn, fresh

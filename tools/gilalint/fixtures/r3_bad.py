@@ -1,0 +1,11 @@
+"""R3 positives: host-sync hazards inside a jitted step."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def step(x):
+    total = x.sum()
+    host = np.asarray(x)                   # pulls the traced value to host
+    print("total so far:", total)          # trace-time (or callback) print
+    return float(total) + host.mean()      # host sync inside the step

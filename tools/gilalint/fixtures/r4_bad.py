@@ -1,0 +1,22 @@
+"""R4 positives: recompile / trace-error hazards."""
+import jax
+
+
+@jax.jit
+def step(x):
+    if x.sum() > 0:                        # Python branch on traced value
+        x = -x
+    return x
+
+
+@jax.jit
+def step_shape(x):
+    if x.shape[0] > 128:                   # forks structure within a bucket
+        return x[:128]
+    return x
+
+
+@jax.jit
+def step_fmt(x):
+    label = f"val={x}"                     # traced value has no concrete repr
+    return x, label

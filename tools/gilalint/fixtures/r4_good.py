@@ -1,0 +1,19 @@
+"""R4 negative: data-dependent selection on device, structure from statics."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("truncate",))
+def step(x, *, truncate):
+    y = jnp.where(x > 0, x, -x)            # select, don't branch
+    if truncate:                           # static argument — fine
+        y = y[:128]
+    return y
+
+
+def host_driver(x_np):
+    if x_np.shape[0] > 128:                # untraced host code may branch
+        return x_np[:128]
+    return x_np

@@ -1,0 +1,10 @@
+"""R6 positives: float64 creep in trace-reachable code."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def kernel(x):
+    y = x.astype(float)                    # python float is float64
+    z = jnp.zeros((4,), dtype=jnp.float64)
+    return y + z

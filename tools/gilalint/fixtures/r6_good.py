@@ -1,0 +1,10 @@
+"""R6 negative: explicit float32 end-to-end."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def kernel(x):
+    y = x.astype(jnp.float32)
+    z = jnp.zeros((4,), dtype=jnp.float32)
+    return y + z

@@ -1,0 +1,55 @@
+"""Finding type, baseline handling, and report rendering for gilalint."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint/audit finding, pointing at file:line with a fix hint."""
+    file: str            # repo-relative posix path ("" for audit findings)
+    line: int
+    col: int
+    rule: str            # "R1".."R6" (AST lint) or "A1".."A4" (jaxpr audit)
+    message: str
+    hint: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        """Line-number-insensitive identity used for baseline matching, so
+        unrelated edits above a (baselined) finding do not resurface it."""
+        return f"{self.rule}:{self.file}:{self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        loc = f"{self.file}:{self.line}:{self.col}" if self.file else "<audit>"
+        out = f"{loc}: {self.rule}: {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+
+def load_baseline(path: pathlib.Path | str | None) -> set[str]:
+    """Fingerprints of accepted findings. The checked-in baseline ships —
+    and must stay — EMPTY (tests/test_gilalint.py regression-tests this);
+    the mechanism exists so a future emergency suppression is explicit,
+    reviewed, and line-move-proof rather than an inline comment."""
+    if path is None:
+        return set()
+    p = pathlib.Path(path)
+    if not p.is_file():
+        return set()
+    entries = json.loads(p.read_text(encoding="utf-8"))
+    out = set()
+    for e in entries:
+        out.add(e if isinstance(e, str)
+                else f"{e['rule']}:{e['file']}:{e['message']}")
+    return out
+
+
+def render_text(findings) -> str:
+    return "\n".join(f.render() for f in findings)

@@ -1,0 +1,966 @@
+"""Layer 1: AST lint over a source tree — no execution, no imports.
+
+Repo-specific rules (DESIGN.md §10):
+
+  R1  nondeterminism (np.random / random / time / datetime / uuid / secrets)
+      reachable from a traced step function — randomness must route through
+      utils/prng fold-in streams;
+  R2  compile-cache key completeness — every per-call-varying input a
+      ``CompileCache`` builder closes over must appear in the cache key,
+      including AMBIENT config (os.environ reads like REPRO_PALLAS) read at
+      trace time anywhere in the builder's call graph;
+  R3  host-sync hazards inside traced functions — ``.item()``,
+      ``float(x)``/``int(x)``/``bool(x)``, ``np.asarray``/``np.array`` on
+      traced values, ``print``;
+  R4  recompile / trace-break hazards — Python branches on traced values or
+      on ``.shape`` of traced args, f-strings / ``str()`` of traced values;
+  R5  shard_map ``in_specs`` arity vs. callee parameters; PartitionSpec /
+      collective axis names checked against the axes declared in
+      launch/mesh.py;
+  R6  dtype discipline — float64/complex128 upcasts reachable from traced
+      code or anywhere under kernels/.
+
+The engine builds a cross-module index (imports, defs, aliases), marks
+traced contexts (jit-decorated / jit-wrapped / loop-body / shard_map'd /
+nested therein), and propagates a "traced-reach" relation along resolved
+calls and function references — so a kernel helper five modules away from
+the ``jax.jit`` call site is still checked.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+import pathlib
+
+from tools.gilalint.report import Finding
+
+# function-position argument sinks that trace their callable at jit time
+TRACE_HOFS = {
+    "fori_loop", "scan", "while_loop", "cond", "switch", "map", "vmap",
+    "pmap", "shard_map", "pallas_call", "associative_scan", "checkpoint",
+    "remat", "grad", "value_and_grad", "custom_jvp", "custom_vjp",
+}
+# attributes whose access on a traced value is static (no host sync)
+STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "aval", "sharding"}
+NONDET_TIME = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+               "monotonic", "monotonic_ns", "process_time", "clock"}
+NONDET_DATETIME = {"now", "utcnow", "today"}
+COLLECTIVES = {"psum", "pmax", "pmin", "pmean", "all_gather", "ppermute",
+               "all_to_all", "axis_index", "psum_scatter", "pshuffle",
+               "axis_size", "pbroadcast", "pvary"}
+F64_ATTRS = {"float64", "double", "longdouble", "complex128", "float128"}
+BUILTIN_NAMES = set(dir(builtins))
+
+
+def _terminal(node):
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _dotted(node):
+    """'a.b.c' for a pure Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _names_in(node) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+class FuncInfo:
+    """One function/lambda scope with its local bindings and trace flags."""
+
+    def __init__(self, node, module, parent):
+        self.node = node
+        self.module = module
+        self.parent = parent                 # FuncInfo | None
+        self.name = getattr(node, "name", "<lambda>")
+        self.children: list[FuncInfo] = []
+        self.traced = False                  # directly traced (or nested in)
+        self.traced_reach = False            # referenced from traced code
+        self.imports: dict[str, tuple] = {}  # function-level imports
+        args = node.args
+        params = [a.arg for a in args.posonlyargs + args.args
+                  + args.kwonlyargs]
+        for extra in (args.vararg, args.kwarg):
+            if extra is not None:
+                params.append(extra.arg)
+        self.params_order = params
+        self.params = set(params)
+        self.bound = set(params)
+        self.static_params: set[str] = set()   # jit static_argnames/nums
+
+    def scope_chain(self):
+        f = self
+        while f is not None:
+            yield f
+            f = f.parent
+
+
+class ModuleInfo:
+    def __init__(self, path: pathlib.Path, rel: str, dotted: str | None):
+        self.path = path
+        self.rel = rel                       # display path
+        self.dotted = dotted                 # e.g. "repro.core.bucketing"
+        self.tree = ast.parse(path.read_text(encoding="utf-8"), filename=rel)
+        self.imports: dict[str, tuple] = {}  # alias -> ("mod", dotted) |
+        #                                      ("from", pkg, name)
+        self.top_funcs: dict[str, FuncInfo] = {}
+        self.aliases: dict[str, str] = {}    # backend_mode = _mode
+        self.module_names: set[str] = set()  # every module-level binding
+        self.functions: list[FuncInfo] = []  # all FuncInfos, any depth
+
+
+def _collect_imports(body_walker, into: dict):
+    for node in body_walker:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                into[a.asname or a.name.split(".")[0]] = (
+                    "mod", a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                into[a.asname or a.name] = ("from", node.module, a.name)
+
+
+class _ScopeBuilder(ast.NodeVisitor):
+    """Populates ModuleInfo: FuncInfo tree, imports, bound names."""
+
+    def __init__(self, mi: ModuleInfo):
+        self.mi = mi
+        self.stack: list[FuncInfo] = []
+
+    def _bind(self, name: str):
+        if self.stack:
+            self.stack[-1].bound.add(name)
+        else:
+            self.mi.module_names.add(name)
+
+    def _enter(self, node):
+        fi = FuncInfo(node, self.mi, self.stack[-1] if self.stack else None)
+        if self.stack:
+            self.stack[-1].children.append(fi)
+            self.stack[-1].bound.add(fi.name)
+        else:
+            self.mi.top_funcs.setdefault(fi.name, fi)
+            self.mi.module_names.add(fi.name)
+        self.mi.functions.append(fi)
+        node._gila_func = fi
+        self.stack.append(fi)
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+        self.stack.pop()
+
+    visit_FunctionDef = visit_AsyncFunctionDef = visit_Lambda = _enter
+
+    def visit_ClassDef(self, node):
+        self._bind(node.name)
+        self.generic_visit(node)
+
+    def visit_Import(self, node):
+        _collect_imports([node],
+                         self.stack[-1].imports if self.stack
+                         else self.mi.imports)
+        for a in node.names:
+            self._bind(a.asname or a.name.split(".")[0])
+
+    def visit_ImportFrom(self, node):
+        _collect_imports([node],
+                         self.stack[-1].imports if self.stack
+                         else self.mi.imports)
+        for a in node.names:
+            self._bind(a.asname or a.name)
+
+    def visit_Assign(self, node):
+        for t in node.targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name):
+                    self._bind(n.id)
+        if (not self.stack and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Name)):
+            self.mi.aliases[node.targets[0].id] = node.value.id
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node):
+        if isinstance(node.target, ast.Name):
+            self._bind(node.target.id)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        if isinstance(node.target, ast.Name):
+            self._bind(node.target.id)
+        self.generic_visit(node)
+
+    def visit_For(self, node):
+        for n in ast.walk(node.target):
+            if isinstance(n, ast.Name):
+                self._bind(n.id)
+        self.generic_visit(node)
+
+    def visit_With(self, node):
+        for item in node.items:
+            if item.optional_vars is not None:
+                for n in ast.walk(item.optional_vars):
+                    if isinstance(n, ast.Name):
+                        self._bind(n.id)
+        self.generic_visit(node)
+
+    def visit_comprehension(self, node):
+        for n in ast.walk(node.target):
+            if isinstance(n, ast.Name):
+                self._bind(n.id)
+        self.generic_visit(node)
+
+
+def _own_nodes(fi: FuncInfo):
+    """Walk a function's own body, not descending into nested functions."""
+    stack = list(ast.iter_child_nodes(fi.node))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class Index:
+    """Cross-module name resolution + call/reference graph."""
+
+    def __init__(self, modules: list[ModuleInfo]):
+        self.modules = modules
+        self.by_dotted = {m.dotted: m for m in modules if m.dotted}
+
+    def module_func(self, mi: ModuleInfo, name: str) -> FuncInfo | None:
+        seen = set()
+        while name in mi.aliases and name not in mi.top_funcs \
+                and name not in seen:
+            seen.add(name)
+            name = mi.aliases[name]
+        return mi.top_funcs.get(name)
+
+    def _import_target(self, entry) -> tuple:
+        """('module', ModuleInfo) | ('func', FuncInfo) | ('ext', dotted)."""
+        kind = entry[0]
+        if kind == "mod":
+            m = self.by_dotted.get(entry[1])
+            return ("module", m) if m else ("ext", entry[1])
+        _, pkg, name = entry
+        m = self.by_dotted.get(f"{pkg}.{name}")
+        if m:
+            return ("module", m)
+        src = self.by_dotted.get(pkg)
+        if src:
+            f = self.module_func(src, name)
+            if f:
+                return ("func", f)
+            return ("none", None)
+        return ("ext", f"{pkg}.{name}")
+
+    def lookup(self, name: str, fi: FuncInfo | None, mi: ModuleInfo):
+        """Resolve a bare name to ('func', FuncInfo) / ('module', ModuleInfo)
+        / ('ext', dotted) / ('none', None) through the scope chain."""
+        chain = list(fi.scope_chain()) if fi else []
+        for f in chain:
+            for child in f.children:
+                if child.name == name:
+                    return ("func", child)
+            if name in f.imports:
+                return self._import_target(f.imports[name])
+            if name in f.bound:
+                return ("none", None)       # plain local binding
+        if name in mi.top_funcs or name in mi.aliases:
+            f = self.module_func(mi, name)
+            if f:
+                return ("func", f)
+        if name in mi.imports:
+            return self._import_target(mi.imports[name])
+        return ("none", None)
+
+    def resolve_ref(self, node, fi: FuncInfo | None,
+                    mi: ModuleInfo) -> FuncInfo | None:
+        """FuncInfo a Name/Attribute load refers to, if resolvable."""
+        if isinstance(node, ast.Name):
+            kind, tgt = self.lookup(node.id, fi, mi)
+            return tgt if kind == "func" else None
+        if isinstance(node, ast.Attribute) and isinstance(node.value,
+                                                          ast.Name):
+            kind, tgt = self.lookup(node.value.id, fi, mi)
+            if kind == "module":
+                return self.module_func(tgt, node.attr)
+        return None
+
+    # -- external dotted name of a reference (for numpy/time checks) ---------
+
+    def external_dotted(self, node, fi: FuncInfo | None,
+                        mi: ModuleInfo) -> str | None:
+        """Canonical external dotted path ('numpy.random.rand') of a
+        Name/Attribute chain whose root is an imported external name."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        kind, tgt = self.lookup(node.id, fi, mi)
+        if kind != "ext":
+            return None
+        parts.append(tgt)
+        return ".".join(reversed(parts))
+
+
+def _jit_statics(call: ast.Call, params_order: list[str]) -> set[str]:
+    """Param names declared static via static_argnames/static_argnums."""
+    out = set()
+    for k in call.keywords:
+        vals = []
+        if isinstance(k.value, ast.Constant):
+            vals = [k.value.value]
+        elif isinstance(k.value, (ast.Tuple, ast.List)):
+            vals = [e.value for e in k.value.elts
+                    if isinstance(e, ast.Constant)]
+        if k.arg == "static_argnames":
+            out |= {v for v in vals if isinstance(v, str)}
+        elif k.arg == "static_argnums":
+            for v in vals:
+                if isinstance(v, int) and 0 <= v < len(params_order):
+                    out.add(params_order[v])
+    return out
+
+
+def _mark_traced(index: Index):
+    """Mark directly-traced functions, then propagate reachability."""
+    def is_jit_expr(node):
+        t = _terminal(node)
+        if t == "jit":
+            return True
+        if isinstance(node, ast.Call) and _terminal(node.func) == "partial":
+            return any(_terminal(a) == "jit" for a in node.args)
+        if isinstance(node, ast.Call):
+            return is_jit_expr(node.func)
+        return False
+
+    for mi in index.modules:
+        for fi in mi.functions:
+            if isinstance(fi.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for d in fi.node.decorator_list:
+                    if is_jit_expr(d):
+                        fi.traced = True
+                        if isinstance(d, ast.Call):
+                            fi.static_params |= _jit_statics(
+                                d, fi.params_order)
+        for node in ast.walk(mi.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fi = _enclosing(node, mi)
+            t = _terminal(node.func)
+            cands = []
+            if t == "jit" and node.args:
+                cands = [node.args[0]]
+            elif t in TRACE_HOFS:
+                # builtin map() / jax.tree.map are NOT tracing contexts
+                if t == "map":
+                    d = _dotted(node.func)
+                    if not (d and d.endswith("lax.map")):
+                        continue
+                cands = list(node.args) + [k.value for k in node.keywords]
+            for arg in cands:
+                tgt = arg._gila_func if isinstance(arg, ast.Lambda) \
+                    else index.resolve_ref(arg, fi, mi)
+                if tgt is not None:
+                    tgt.traced = True
+                    if t == "jit":
+                        tgt.static_params |= _jit_statics(
+                            node, tgt.params_order)
+
+    # nested functions of a traced function run at trace time too
+    def mark_down(fi):
+        for c in fi.children:
+            if not c.traced:
+                c.traced = True
+                mark_down(c)
+    for mi in index.modules:
+        for fi in mi.functions:
+            if fi.traced:
+                mark_down(fi)
+
+    # propagate traced-reach along resolved calls and function references
+    edges: dict[int, list[FuncInfo]] = {}
+    for mi in index.modules:
+        for fi in mi.functions:
+            outs = []
+            for node in _own_nodes(fi):
+                if isinstance(node, (ast.Name, ast.Attribute)):
+                    tgt = index.resolve_ref(node, fi, mi)
+                    if tgt is not None:
+                        outs.append(tgt)
+            outs.extend(fi.children)
+            edges[id(fi)] = outs
+    work = [fi for mi in index.modules for fi in mi.functions if fi.traced]
+    for fi in work:
+        fi.traced_reach = True
+    while work:
+        fi = work.pop()
+        for tgt in edges.get(id(fi), ()):
+            if not tgt.traced_reach:
+                tgt.traced_reach = True
+                work.append(tgt)
+    return edges
+
+
+def _enclosing(node, mi: ModuleInfo) -> FuncInfo | None:
+    """FuncInfo whose body contains the node (via parent annotations)."""
+    return getattr(node, "_gila_enclosing", None)
+
+
+def _annotate_enclosing(mi: ModuleInfo):
+    def visit(node, fi):
+        node._gila_enclosing = fi
+        child_fi = getattr(node, "_gila_func", fi)
+        for c in ast.iter_child_nodes(node):
+            visit(c, child_fi)
+    visit(mi.tree, None)
+
+
+# -- taint: names derived from a traced function's parameters -----------------
+
+def _tainted_names(fi: FuncInfo) -> set[str]:
+    tainted = set(fi.params) - fi.static_params
+    f = fi.parent
+    while f is not None:
+        if f.traced:
+            tainted |= f.params - f.static_params
+        f = f.parent
+    changed = True
+    while changed:
+        changed = False
+        for node in _own_nodes(fi):
+            # _naked_taint (not raw name intersection): a local derived
+            # only through .shape/.dtype/len is static, not traced
+            if isinstance(node, ast.Assign):
+                if _naked_taint(node.value, tainted):
+                    for t in node.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name) \
+                                    and n.id not in tainted:
+                                tainted.add(n.id)
+                                changed = True
+            elif isinstance(node, ast.For):
+                if _naked_taint(node.iter, tainted):
+                    for n in ast.walk(node.target):
+                        if isinstance(n, ast.Name) and n.id not in tainted:
+                            tainted.add(n.id)
+                            changed = True
+    return tainted
+
+
+def _naked_taint(node, tainted: set[str]) -> bool:
+    """A tainted name used for its VALUE (not via static .shape/.dtype/len,
+    and not via identity tests, which never call __bool__ on a tracer)."""
+    if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+        return False
+    if isinstance(node, ast.Call) and _terminal(node.func) in (
+            "len", "isinstance", "hasattr", "type", "id"):
+        return False
+    if isinstance(node, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+        return False
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    return any(_naked_taint(c, tainted) for c in ast.iter_child_nodes(node))
+
+
+# -- the linter ---------------------------------------------------------------
+
+class Linter:
+    def __init__(self, index: Index, mesh_axes: set[str] | None):
+        self.index = index
+        self.mesh_axes = mesh_axes
+        self.findings: list[Finding] = []
+        for mi in index.modules:
+            _annotate_enclosing(mi)
+        self.edges = _mark_traced(index)
+        self.ambient_reach = self._ambient_reach()
+
+    def add(self, mi, node, rule, message, hint=""):
+        self.findings.append(Finding(
+            file=mi.rel, line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0), rule=rule,
+            message=message, hint=hint))
+
+    # ambient config: functions whose call graph reads os.environ ------------
+
+    def _ambient_reach(self) -> dict[int, str]:
+        """id(FuncInfo) -> dotted path of an os.environ reader it reaches."""
+        reach: dict[int, str] = {}
+        work = []
+        for mi in self.index.modules:
+            for fi in mi.functions:
+                for node in _own_nodes(fi):
+                    dotted = None
+                    if isinstance(node, (ast.Attribute, ast.Name)):
+                        dotted = self.index.external_dotted(node, fi, mi)
+                    if dotted in ("os.environ", "os.getenv"):
+                        reach[id(fi)] = f"{mi.rel}:{fi.name}"
+                        work.append(fi)
+                        break
+        # reverse edges: who references an ambient reader?
+        rev: dict[int, list[FuncInfo]] = {}
+        for mi in self.index.modules:
+            for fi in mi.functions:
+                for tgt in self.edges.get(id(fi), ()):
+                    rev.setdefault(id(tgt), []).append(fi)
+        while work:
+            fi = work.pop()
+            for src in rev.get(id(fi), ()):
+                if id(src) not in reach:
+                    reach[id(src)] = reach[id(fi)]
+                    work.append(src)
+        return reach
+
+    # R1 ---------------------------------------------------------------------
+
+    def check_r1(self, mi: ModuleInfo):
+        for fi in mi.functions:
+            if not fi.traced_reach:
+                continue
+            for node in _own_nodes(fi):
+                if not isinstance(node, (ast.Attribute, ast.Name)):
+                    continue
+                d = self.index.external_dotted(node, fi, mi)
+                if d is None:
+                    continue
+                parts = d.split(".")
+                bad = None
+                if parts[0] == "numpy" and len(parts) >= 2 \
+                        and parts[1] == "random":
+                    bad = "np.random is host-stateful"
+                elif parts[0] == "random":
+                    bad = "the random module is host-stateful"
+                elif parts[0] == "time" and len(parts) == 2 \
+                        and parts[1] in NONDET_TIME:
+                    bad = "wall-clock reads are nondeterministic"
+                elif parts[0] == "datetime" and parts[-1] in NONDET_DATETIME:
+                    bad = "date/time reads are nondeterministic"
+                elif parts[0] in ("secrets", "uuid") and len(parts) > 1:
+                    bad = f"{parts[0]} is nondeterministic"
+                elif d == "os.urandom":
+                    bad = "os.urandom is nondeterministic"
+                if bad:
+                    self.add(mi, node, "R1",
+                             f"nondeterministic '{d}' reachable from a "
+                             f"traced step function ({fi.name}): {bad}",
+                             "route randomness through utils/prng fold-in "
+                             "streams (value at i depends only on (key, i))")
+
+    # R2 ---------------------------------------------------------------------
+
+    def _cache_names(self, mi: ModuleInfo) -> set[str]:
+        """Module-level names bound to CompileCache() instances (local
+        assignment or import of such a name)."""
+        out = set()
+        for node in mi.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Call) \
+                    and _terminal(node.value.func) == "CompileCache":
+                out.add(node.targets[0].id)
+        return out
+
+    def _is_cache_get(self, node: ast.Call, fi, mi) -> bool:
+        f = node.func
+        if not (isinstance(f, ast.Attribute) and f.attr == "get"):
+            return False
+        base = f.value
+        if isinstance(base, ast.Name):
+            if base.id in self._cache_names(mi):
+                return True
+            # from-import of a cache instance defined elsewhere
+            entry = None
+            for scope in (list(fi.scope_chain()) if fi else []):
+                if base.id in scope.imports:
+                    entry = scope.imports[base.id]
+                    break
+            entry = entry or mi.imports.get(base.id)
+            if entry and entry[0] == "from":
+                src = self.index.by_dotted.get(entry[1])
+                if src and entry[2] in self._cache_names(src):
+                    return True
+            return False
+        if isinstance(base, ast.Attribute) and isinstance(base.value,
+                                                          ast.Name):
+            kind, tgt = self.index.lookup(base.value.id, fi, mi)
+            if kind == "module" and base.attr in self._cache_names(tgt):
+                return True
+        return False
+
+    def _assignments(self, fi: FuncInfo) -> list[tuple[set[str], ast.AST]]:
+        out = []
+        for node in _own_nodes(fi):
+            if isinstance(node, ast.Assign):
+                tgts = set()
+                for t in node.targets:
+                    tgts |= _names_in(t)
+                out.append((tgts, node.value))
+        return out
+
+    def _expand(self, names: set[str], assigns) -> set[str]:
+        """Closure of names under local 'x = expr' definitions."""
+        seen = set(names)
+        changed = True
+        while changed:
+            changed = False
+            for tgts, rhs in assigns:
+                if tgts & seen:
+                    new = _names_in(rhs) - seen
+                    if new:
+                        seen |= new
+                        changed = True
+        return seen
+
+    def check_r2(self, mi: ModuleInfo):
+        for node in ast.walk(mi.tree):
+            if not (isinstance(node, ast.Call) and len(node.args) >= 2):
+                continue
+            fi = _enclosing(node, mi)
+            if not self._is_cache_get(node, fi, mi):
+                continue
+            key_expr, builder_expr = node.args[0], node.args[1]
+            if isinstance(builder_expr, ast.Lambda):
+                builder = builder_expr._gila_func
+            else:
+                builder = self.index.resolve_ref(builder_expr, fi, mi)
+            if builder is None:
+                continue
+            assigns = self._assignments(fi) if fi else []
+            key_closure = self._expand(_names_in(key_expr), assigns)
+            # the key expression plus every local definition feeding it
+            key_exprs = [key_expr] + [rhs for tgts, rhs in assigns
+                                      if tgts & key_closure]
+
+            # 1) every free name of the builder must be derivable from the key
+            module_level = (mi.module_names | set(mi.imports)
+                            | BUILTIN_NAMES)
+            for f in sorted(self._free_names(builder) - module_level):
+                kind, _ = self.index.lookup(f, builder, mi)
+                if kind in ("func", "module", "ext"):
+                    continue                # static callables/modules
+                if self._expand({f}, assigns) & key_closure:
+                    continue
+                self.add(mi, node, "R2",
+                         f"compile-cache builder closes over '{f}' which "
+                         "does not appear in the cache key",
+                         "add it to the key tuple (or derive it from a "
+                         "keyed value) — a stale entry would otherwise be "
+                         "served when it changes")
+
+            # 2) ambient config read at trace time must be keyed
+            amb = self.ambient_reach.get(id(builder))
+            if amb is not None and not self._key_covers_ambient(
+                    key_exprs, fi, mi):
+                self.add(mi, node, "R2",
+                         "builder's trace reads ambient config "
+                         f"(os.environ via {amb}) but the cache key has no "
+                         "backend component",
+                         "include bucketing.kernel_backend() (or the "
+                         "relevant env reader) in the key tuple")
+
+    def _free_names(self, fi: FuncInfo) -> set[str]:
+        free = set()
+        for n in _own_nodes(fi):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+                free.add(n.id)
+        for c in fi.children:
+            free |= self._free_names(c)
+        return free - fi.bound
+
+    def _key_covers_ambient(self, key_exprs, fi, mi) -> bool:
+        """Does the key evaluate an ambient-reading function (directly or in
+        a local definition that feeds the key)?"""
+        for e in key_exprs:
+            for n in ast.walk(e):
+                if isinstance(n, (ast.Name, ast.Attribute)):
+                    f = self.index.resolve_ref(n, fi, mi)
+                    if f is not None and id(f) in self.ambient_reach:
+                        return True
+        return False
+
+    # R3 / R4 ----------------------------------------------------------------
+
+    def check_r3_r4(self, mi: ModuleInfo):
+        np_like = {"asarray", "array", "ascontiguousarray"}
+        for fi in mi.functions:
+            if not fi.traced:
+                continue
+            tainted = _tainted_names(fi)
+            for node in _own_nodes(fi):
+                if isinstance(node, ast.Call):
+                    t = _terminal(node.func)
+                    if t == "item" and isinstance(node.func, ast.Attribute) \
+                            and _naked_taint(node.func.value, tainted):
+                        self.add(mi, node, "R3",
+                                 ".item() on a traced value blocks on "
+                                 "device→host sync inside the step",
+                                 "keep reductions on device; sync once at "
+                                 "the driver's io_boundary")
+                    elif isinstance(node.func, ast.Name) \
+                            and node.func.id in ("float", "int", "bool") \
+                            and node.args \
+                            and _naked_taint(node.args[0], tainted):
+                        self.add(mi, node, "R3",
+                                 f"{node.func.id}() on a traced value "
+                                 "forces a host sync (or a trace error)",
+                                 "use jnp ops / keep the value on device")
+                    elif isinstance(node.func, ast.Attribute) \
+                            and node.func.attr in np_like \
+                            and node.args \
+                            and _naked_taint(node.args[0], tainted):
+                        d = self.index.external_dotted(node.func, fi, mi)
+                        if d and d.startswith("numpy."):
+                            self.add(mi, node, "R3",
+                                     f"np.{node.func.attr}() on a traced "
+                                     "value pulls it to host inside the "
+                                     "step",
+                                     "use jnp.asarray / keep staging at "
+                                     "the driver's io_boundary")
+                    elif isinstance(node.func, ast.Name) \
+                            and node.func.id == "print":
+                        self.add(mi, node, "R3",
+                                 "print() inside a traced function — runs "
+                                 "at trace time (or not at all), and as a "
+                                 "callback it breaks the no-host-transfer "
+                                 "audit",
+                                 "use jax.debug.print outside cached "
+                                 "steps, or log from the driver")
+                    elif isinstance(node.func, ast.Name) \
+                            and node.func.id == "str" and node.args \
+                            and _naked_taint(node.args[0], tainted):
+                        self.add(mi, node, "R4",
+                                 "str() of a traced value at trace time",
+                                 "derive strings from static config, not "
+                                 "traced arrays")
+                elif isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                    test = node.test
+                    shape_hit = any(
+                        isinstance(n, ast.Attribute) and n.attr == "shape"
+                        and isinstance(n.value, ast.Name)
+                        and n.value.id in tainted
+                        for n in ast.walk(test))
+                    if shape_hit:
+                        self.add(mi, node, "R4",
+                                 "Python branch on .shape of a traced arg "
+                                 "forks program structure within a shape "
+                                 "bucket",
+                                 "derive structure from the cache key / "
+                                 "static args so the padding-invariance "
+                                 "audit holds")
+                    elif _naked_taint(test, tainted):
+                        self.add(mi, node, "R4",
+                                 "Python branch on a traced value — trace "
+                                 "error or silent specialization",
+                                 "use jnp.where / lax.cond")
+                elif isinstance(node, ast.JoinedStr):
+                    if any(isinstance(v, ast.FormattedValue)
+                           and _naked_taint(v.value, tainted)
+                           for v in node.values):
+                        self.add(mi, node, "R4",
+                                 "f-string interpolates a traced value at "
+                                 "trace time",
+                                 "format static config only; traced values "
+                                 "have no concrete repr")
+
+    # R5 ---------------------------------------------------------------------
+
+    def check_r5(self, mi: ModuleInfo):
+        for node in ast.walk(mi.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fi = _enclosing(node, mi)
+            t = _terminal(node.func)
+            if t == "shard_map":
+                self._check_shard_map(mi, node, fi)
+            elif t in COLLECTIVES and self.mesh_axes is not None:
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    if isinstance(arg, ast.Constant) \
+                            and isinstance(arg.value, str) \
+                            and arg.value not in self.mesh_axes:
+                        self.add(mi, arg, "R5",
+                                 f"collective '{t}' names axis "
+                                 f"'{arg.value}' not declared in "
+                                 "launch/mesh.py",
+                                 f"declared axes: "
+                                 f"{sorted(self.mesh_axes)}")
+
+    def _check_shard_map(self, mi, node: ast.Call, fi):
+        kw = {k.arg: k.value for k in node.keywords}
+        target = node.args[0] if node.args else kw.get("f")
+        in_specs = kw.get("in_specs")
+        if len(node.args) >= 3:
+            in_specs = node.args[2]
+        callee = None
+        if isinstance(target, ast.Lambda):
+            callee = target._gila_func
+        elif target is not None:
+            callee = self.index.resolve_ref(target, fi, mi)
+        if callee is not None and isinstance(in_specs, ast.Tuple):
+            nparams = len(callee.params)
+            if len(in_specs.elts) != nparams:
+                self.add(mi, node, "R5",
+                         f"shard_map in_specs has {len(in_specs.elts)} "
+                         f"entries but '{callee.name}' takes {nparams} "
+                         "parameters",
+                         "one spec per positional parameter")
+        if self.mesh_axes is None:
+            return
+        for spec_src in (in_specs, kw.get("out_specs")):
+            if spec_src is None:
+                continue
+            for n in ast.walk(spec_src):
+                if isinstance(n, ast.Call) and _terminal(n.func) in (
+                        "P", "PartitionSpec"):
+                    for a in n.args:
+                        vals = [a.value] if isinstance(a, ast.Constant) \
+                            else [e.value for e in a.elts
+                                  if isinstance(e, ast.Constant)] \
+                            if isinstance(a, ast.Tuple) else []
+                        for v in vals:
+                            if isinstance(v, str) \
+                                    and v not in self.mesh_axes:
+                                self.add(mi, a, "R5",
+                                         f"PartitionSpec axis '{v}' not "
+                                         "declared in launch/mesh.py",
+                                         f"declared axes: "
+                                         f"{sorted(self.mesh_axes)}")
+
+    # R6 ---------------------------------------------------------------------
+
+    def check_r6(self, mi: ModuleInfo):
+        in_kernels = "/kernels/" in mi.rel.replace("\\", "/")
+        for fi in mi.functions:
+            if not (fi.traced_reach or in_kernels):
+                continue
+            for node in _own_nodes(fi):
+                self._r6_node(mi, fi, node)
+        if in_kernels:
+            for node in mi.tree.body:
+                for n in ast.walk(node):
+                    if getattr(n, "_gila_enclosing", None) is None:
+                        self._r6_node(mi, None, n)
+
+    def _r6_node(self, mi, fi, node):
+        if isinstance(node, ast.Attribute) and node.attr in F64_ATTRS:
+            d = self.index.external_dotted(node, fi, mi)
+            if d and d.split(".")[0] in ("numpy", "jax"):
+                self.add(mi, node, "R6",
+                         f"64-bit dtype '{d.split('.')[0]}."
+                         f"{node.attr}' in trace-reachable/kernel code",
+                         "the layout pipeline is float32 end-to-end; f64 "
+                         "either upcasts silently or errors under "
+                         "jax_enable_x64=False")
+        elif isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "astype" and node.args \
+                    and isinstance(node.args[0], ast.Name) \
+                    and node.args[0].id == "float":
+                self.add(mi, node, "R6",
+                         "astype(float) is float64",
+                         "use jnp.float32 explicitly")
+            for k in node.keywords:
+                if k.arg == "dtype" and isinstance(k.value, ast.Name) \
+                        and k.value.id == "float":
+                    self.add(mi, node, "R6",
+                             "dtype=float is float64",
+                             "use jnp.float32 explicitly")
+
+
+# -- entry point --------------------------------------------------------------
+
+def _collect_files(paths) -> list[tuple[pathlib.Path, str | None]]:
+    """(file, dotted-module-path) pairs. A directory argument is treated as
+    a package root (namespace packages included: 'src/repro' without an
+    __init__.py still maps to 'repro.…'), so cross-module import
+    resolution works over the scanned tree."""
+    out = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            for q in sorted(p.rglob("*.py")):
+                if "__pycache__" in q.parts:
+                    continue
+                rel = q.relative_to(p)
+                parts = [p.name] + list(rel.parts[:-1])
+                if q.stem != "__init__":
+                    parts.append(q.stem)
+                out.append((q, ".".join(parts)))
+        elif p.suffix == ".py":
+            out.append((p, _dotted_for(p)))
+    return out
+
+
+def _dotted_for(path: pathlib.Path) -> str | None:
+    """Dotted module path by walking up through __init__.py packages."""
+    if not (path.parent / "__init__.py").exists():
+        return None
+    parts = [path.stem] if path.stem != "__init__" else []
+    d = path.parent
+    while (d / "__init__.py").exists():
+        parts.insert(0, d.name)
+        d = d.parent
+    return ".".join(parts) if parts else None
+
+
+def declared_mesh_axes(modules) -> set[str] | None:
+    """Axis-name universe: every all-string tuple literal in a module whose
+    path ends in launch/mesh.py (plus None, always legal in a spec)."""
+    axes = set()
+    found = False
+    for mi in modules:
+        rel = mi.rel.replace("\\", "/")
+        if not rel.endswith("launch/mesh.py"):
+            continue
+        found = True
+        for node in ast.walk(mi.tree):
+            if isinstance(node, ast.Tuple) and node.elts and all(
+                    isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    for e in node.elts):
+                axes |= {e.value for e in node.elts}
+    return axes if found else None
+
+
+def lint_paths(paths, *, repo_root=None, mesh_axes=None) -> list[Finding]:
+    """Lint every .py under ``paths``; returns findings sorted by location.
+
+    ``mesh_axes``: explicit axis-name universe for R5 (defaults to the
+    tuples declared in any scanned launch/mesh.py; if neither is present,
+    axis-name checks are skipped — arity checks still run)."""
+    repo_root = pathlib.Path(repo_root) if repo_root else pathlib.Path.cwd()
+    modules = []
+    for f, dotted in _collect_files(paths):
+        try:
+            rel = str(f.resolve().relative_to(repo_root.resolve()))
+        except ValueError:
+            rel = str(f)
+        modules.append(ModuleInfo(f, rel.replace("\\", "/"), dotted))
+    for mi in modules:
+        _ScopeBuilder(mi).visit(mi.tree)
+    index = Index(modules)
+    axes = set(mesh_axes) if mesh_axes is not None \
+        else declared_mesh_axes(modules)
+    linter = Linter(index, axes)
+    for mi in modules:
+        linter.check_r1(mi)
+        linter.check_r2(mi)
+        linter.check_r3_r4(mi)
+        linter.check_r5(mi)
+        linter.check_r6(mi)
+    return sorted(linter.findings,
+                  key=lambda f: (f.file, f.line, f.col, f.rule))
