@@ -18,10 +18,11 @@ def main(argv=None) -> None:
                     help="CI-sized instances")
     ap.add_argument("--only", default="",
                     help="comma list: table1,fig5,table3,kernels,serve,"
-                         "pipeline,many")
+                         "pipeline,many,service")
     args = ap.parse_args(argv)
     want = set(args.only.split(",")) if args.only else {
-        "table1", "fig5", "table3", "kernels", "serve", "pipeline", "many"}
+        "table1", "fig5", "table3", "kernels", "serve", "pipeline", "many",
+        "service"}
 
     csv = []
     if "table1" in want:
@@ -63,6 +64,12 @@ def main(argv=None) -> None:
               flush=True)
         from benchmarks import many_bench as mb
         csv += mb.csv_rows(mb.run("smoke" if args.small else "full"))
+
+    if "service" in want:
+        print("== Service: continuous batching vs fixed window under "
+              "Poisson load ==", flush=True)
+        from benchmarks import service_bench as svb
+        csv += svb.csv_rows(svb.run("smoke" if args.small else "full"))
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv:

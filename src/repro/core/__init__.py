@@ -4,7 +4,8 @@
 from repro.core.multilevel import (LayoutConfig, LayoutStats, multigila_layout,
                                    multigila_layout_many, layout_component,
                                    build_hierarchy, connected_components,
-                                   LevelExport, HierarchyExport)
+                                   LevelExport, HierarchyExport,
+                                   GraphJob, WaveScheduler)
 from repro.core.solar_merger import (run_merger, next_level, init_state,
                                      MergerState, LevelInfo,
                                      UNASSIGNED, SUN, PLANET, MOON)

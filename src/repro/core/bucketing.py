@@ -480,13 +480,29 @@ def cached_refine_many(reqs: list[RefineRequest], nbrs: list[tuple], *,
 
 def refine_level_many(reqs: list[RefineRequest], *, ideal_len: float,
                       rep_const: float, min_dist: float = 1e-3,
-                      lanes_min: int = 8) -> list[jnp.ndarray]:
+                      lanes_min: int = 8,
+                      lanes_cap: int | None = None) -> list[jnp.ndarray]:
     """Run one shape-bucket group of refinements as a single device program.
 
     All requests must share ``group_key``. Returns the per-request refined
     positions (lane-padded shape [n_pad, 2]), in request order.
+
+    ``lanes_cap`` bounds the lane bucket of a single dispatch: an oversized
+    group is split into ≤ lanes_cap chunks (lanes are arithmetically
+    independent, so chunking is bit-exact). A long-lived engine
+    (serve/engine.py) sets this so its lane-bucket spectrum is CLOSED —
+    pow2 buckets in [lanes_min, lanes_cap] — and a mid-flight join can
+    never mint a fresh lane-bucket compile once those buckets are warm.
     """
     assert reqs
+    if lanes_cap is not None and len(reqs) > lanes_cap:
+        out = []
+        for i in range(0, len(reqs), lanes_cap):
+            out.extend(refine_level_many(
+                reqs[i:i + lanes_cap], ideal_len=ideal_len,
+                rep_const=rep_const, min_dist=min_dist,
+                lanes_min=lanes_min, lanes_cap=lanes_cap))
+        return out
     mode = reqs[0].sched.mode
 
     # per-lane neighbor lists (host build, same code path + seed as the

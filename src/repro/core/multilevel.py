@@ -474,6 +474,169 @@ class _ComponentTask:
             self.final = p[: self.n]
 
 
+class GraphJob:
+    """One submitted graph in a ``WaveScheduler``'s mutable lane set.
+
+    Admission splits the (possibly disconnected) graph into per-component
+    ``_ComponentTask`` lanes — each one the same pruning → hierarchy →
+    placement state machine the sequential driver walks — and ``result()``
+    reassembles them (component shelf-packing as in ``multigila_layout``)
+    once every lane has finished its finest level. ``cancelled`` jobs keep
+    their tasks but are skipped by the scheduler; their lanes are freed
+    without touching any sibling lane's floats.
+    """
+
+    def __init__(self, edges: np.ndarray, n: int, cfg: LayoutConfig):
+        self.cfg = cfg
+        self.n = int(n)
+        self.cancelled = False
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        labels = connected_components(edges, self.n)
+        self.tasks, self.index_maps = [], []
+        for c in np.unique(labels):
+            vs = np.nonzero(labels == c)[0]
+            remap = np.full(self.n, -1, np.int64)
+            remap[vs] = np.arange(vs.size)
+            emask = labels[edges[:, 0]] == c
+            ce = np.stack([remap[edges[emask, 0]], remap[edges[emask, 1]]], 1)
+            self.tasks.append(_ComponentTask(ce, vs.size, cfg))
+            self.index_maps.append(vs)
+
+    @property
+    def lanes(self) -> int:
+        """Live (unfinished) lanes this job still occupies."""
+        return 0 if self.cancelled else sum(not t.done for t in self.tasks)
+
+    @property
+    def done(self) -> bool:
+        return self.cancelled or all(t.done for t in self.tasks)
+
+    def result(self):
+        """(pos[n, 2], LayoutStats) — identical to ``multigila_layout``."""
+        assert self.done and not self.cancelled
+        if len(self.tasks) == 1:
+            return self.tasks[0].final, self.tasks[0].stats
+        stats = LayoutStats()
+        layouts = []
+        for t in self.tasks:
+            stats.levels = max(stats.levels, t.stats.levels)
+            layouts.append(np.asarray(t.final))
+        packed = _pack_components(layouts)
+        pos = np.zeros((self.n, 2), np.float32)
+        for vs, P in zip(self.index_maps, packed):
+            pos[vs] = P
+        return pos, stats
+
+
+class WaveScheduler:
+    """Long-lived wave scheduler with a mutable lane set (DESIGN.md §11).
+
+    The inversion that makes continuous batching possible: instead of a
+    closed-over batch driven to completion (``multigila_layout_many``'s old
+    wave loop), the scheduler exposes ``admit`` / ``step`` / ``drain``.
+    Jobs join (and leave, via ``remove``) at any wave boundary; each
+    ``step()`` dispatches ONE wave — every selected lane's next per-level
+    refinement, grouped by shape bucket and run as single cached batched
+    device programs (``bucketing.refine_level_many``). A mid-flight join
+    simply appears in the next wave's grouping: lane counts re-bucket to
+    pow2 (floor 8, capped by ``lanes_cap``), so a warm engine compiles
+    nothing for it. Lanes are arithmetically independent — wave membership
+    never changes any lane's floats — so every job's result is
+    bit-identical to a dedicated ``multigila_layout`` call with the same
+    seed regardless of when it joined or which siblings rode along
+    (tests/test_service.py).
+
+    ``step(order=...)`` sorts jobs by the given key before picking lanes
+    and ``max_lanes`` truncates the wave to the most urgent ones — the
+    hook serve/engine.py uses to honor per-request priorities and
+    deadlines (lanes past the cap are *preempted*: they simply do not ride
+    until capacity frees). Pending ``RefineRequest``s are staged once per
+    level and cached across preempted waves, so placement never reruns.
+    """
+
+    def __init__(self, cfg: LayoutConfig | None = None, *,
+                 lanes_cap: int | None = None, dispatch=None):
+        cfg = cfg or LayoutConfig()
+        if cfg.engine != "multigila":
+            raise ValueError("WaveScheduler supports engine='multigila' "
+                             f"only, got {cfg.engine!r}")
+        if not cfg.bucketing:
+            raise ValueError("WaveScheduler requires cfg.bucketing=True")
+        self.cfg = cfg
+        self.lanes_cap = lanes_cap
+        self._dispatch = dispatch or (lambda reqs: bucketing.refine_level_many(
+            reqs, ideal_len=cfg.ideal_len, rep_const=cfg.rep_const,
+            lanes_cap=lanes_cap))
+        self._jobs: list[GraphJob] = []
+        self._staged: dict = {}       # _ComponentTask -> RefineRequest
+        self.waves = 0
+        self.lane_dispatches = 0
+
+    def admit(self, edges, n: int, *, seed: int | None = None) -> GraphJob:
+        """Add one graph to the lane set (legal at any wave boundary)."""
+        cfg = (self.cfg if seed is None
+               else dataclasses.replace(self.cfg, seed=int(seed)))
+        job = GraphJob(edges, n, cfg)
+        self._jobs.append(job)
+        return job
+
+    def remove(self, job: GraphJob) -> None:
+        """Cancel a job: free its lanes and drop its staged requests.
+        Sibling lanes are untouched (their results stay bit-identical)."""
+        job.cancelled = True
+        for t in job.tasks:
+            self._staged.pop(t, None)
+        if job in self._jobs:
+            self._jobs.remove(job)
+
+    @property
+    def active(self) -> bool:
+        return any(not j.done for j in self._jobs)
+
+    def lanes_live(self) -> int:
+        return sum(j.lanes for j in self._jobs)
+
+    def step(self, *, order=None, max_lanes: int | None = None) -> dict:
+        """Dispatch one wave; returns ``{"lanes", "groups"}`` where
+        ``groups`` lists ``(group_key, member_count)`` in dispatch order.
+
+        ``order``: job sort key (ascending; stable, so admit order breaks
+        ties). ``max_lanes``: only the first that-many lanes ride."""
+        self._jobs = [j for j in self._jobs if not j.done]
+        jobs = (sorted(self._jobs, key=order) if order is not None
+                else list(self._jobs))
+        pend = []
+        for j in jobs:
+            for t in j.tasks:
+                if t.done:
+                    continue
+                r = self._staged.get(t)
+                if r is None:
+                    r = self._staged[t] = t.next_request()
+                pend.append((t, r))
+        if max_lanes is not None:
+            pend = pend[:max_lanes]
+        groups: dict = {}
+        for t, r in pend:
+            groups.setdefault(bucketing.group_key(r), []).append((t, r))
+        ginfo = []
+        for key, members in groups.items():
+            outs = self._dispatch([r for _, r in members])
+            for (t, _), pos in zip(members, outs):
+                del self._staged[t]
+                t.feed(pos)
+            ginfo.append((key, len(members)))
+        if pend:
+            self.waves += 1
+            self.lane_dispatches += len(pend)
+        return {"lanes": len(pend), "groups": ginfo}
+
+    def drain(self) -> None:
+        """Step until every admitted job has finished."""
+        while self.step()["lanes"]:
+            pass
+
+
 def multigila_layout_many(graphs: list, cfg: LayoutConfig | None = None,
                           *, seeds: list | None = None) -> list:
     """Batched multi-graph Multi-GiLA: lay out B graphs through grouped,
@@ -487,68 +650,20 @@ def multigila_layout_many(graphs: list, cfg: LayoutConfig | None = None,
     ONE vmapped cached step, so a warm-bucket request compiles nothing and
     each per-graph result is bit-identical to ``multigila_layout`` run one
     graph at a time (tests/test_many.py, benchmarks/many_bench.py).
+
+    This is the one-shot convenience wrapper over ``WaveScheduler``: admit
+    everything, drain, collect. The continuous-batching layout service
+    (serve/engine.py) drives the same scheduler with mid-flight admission.
     """
     cfg = cfg or LayoutConfig()
-    if cfg.engine != "multigila":
-        raise ValueError("multigila_layout_many supports engine='multigila' "
-                         f"only, got {cfg.engine!r}")
-    if not cfg.bucketing:
-        raise ValueError("multigila_layout_many requires cfg.bucketing=True")
     if seeds is not None and len(seeds) != len(graphs):
         raise ValueError("seeds must match graphs in length")
-
-    entries, all_tasks = [], []
-    for k, (edges, n) in enumerate(graphs):
-        gcfg = (cfg if seeds is None
-                else dataclasses.replace(cfg, seed=int(seeds[k])))
-        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
-        labels = connected_components(edges, n)
-        comp_tasks, index_maps = [], []
-        for c in np.unique(labels):
-            vs = np.nonzero(labels == c)[0]
-            remap = np.full(n, -1, np.int64)
-            remap[vs] = np.arange(vs.size)
-            emask = labels[edges[:, 0]] == c
-            ce = np.stack([remap[edges[emask, 0]], remap[edges[emask, 1]]], 1)
-            t = _ComponentTask(ce, vs.size, gcfg)
-            comp_tasks.append(t)
-            index_maps.append(vs)
-            all_tasks.append(t)
-        entries.append((n, comp_tasks, index_maps))
-
-    # wave loop: every unfinished component contributes its next level;
-    # same-bucket requests share one vmapped dispatch
-    while True:
-        pend = [(t, t.next_request()) for t in all_tasks if not t.done]
-        if not pend:
-            break
-        groups: dict = {}
-        for t, r in pend:
-            groups.setdefault(bucketing.group_key(r), []).append((t, r))
-        for members in groups.values():
-            outs = bucketing.refine_level_many(
-                [r for _, r in members], ideal_len=cfg.ideal_len,
-                rep_const=cfg.rep_const)
-            for (t, _), pos in zip(members, outs):
-                t.feed(pos)
-
-    # assemble per-graph results (component packing as in multigila_layout)
-    results = []
-    for n, comp_tasks, index_maps in entries:
-        if len(comp_tasks) == 1:
-            results.append((comp_tasks[0].final, comp_tasks[0].stats))
-            continue
-        stats = LayoutStats()
-        layouts = []
-        for t in comp_tasks:
-            stats.levels = max(stats.levels, t.stats.levels)
-            layouts.append(np.asarray(t.final))
-        packed = _pack_components(layouts)
-        pos = np.zeros((n, 2), np.float32)
-        for vs, P in zip(index_maps, packed):
-            pos[vs] = P
-        results.append((pos, stats))
-    return results
+    sched = WaveScheduler(cfg)     # validates engine/bucketing
+    jobs = [sched.admit(edges, n,
+                        seed=None if seeds is None else int(seeds[k]))
+            for k, (edges, n) in enumerate(graphs)]
+    sched.drain()
+    return [job.result() for job in jobs]
 
 
 def multigila_layout(edges: np.ndarray, n: int,

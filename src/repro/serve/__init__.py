@@ -11,3 +11,8 @@ from repro.serve.query import (QueryEngine, reference_resolve, trim_result,
                                band_for_zoom, MAX_TILES)
 from repro.serve.batcher import MicroBatcher
 from repro.serve.layout_service import LayoutService
+from repro.serve.engine import (ContinuousLayoutService, EngineCore,
+                                EngineBusy, DeadlineExceeded, LayoutRequest,
+                                Clock, SystemClock, VirtualClock, SimEvent,
+                                poisson_trace, run_sim, null_dispatch,
+                                validate_graph)

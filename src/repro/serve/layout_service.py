@@ -22,8 +22,6 @@ from __future__ import annotations
 
 from concurrent.futures import Future
 
-import numpy as np
-
 from repro.serve.batcher import _BatcherCore
 
 
@@ -39,19 +37,15 @@ class LayoutService(_BatcherCore):
     def submit(self, edges, n: int) -> Future:
         """Enqueue one graph; resolves to ``(pos[n, 2], LayoutStats)``.
 
-        Validates the request HERE, not in the batch: requests coalesce
-        into shared driver calls, so one malformed graph would otherwise
-        fail (or, with negative ids wrapping, silently corrupt) every
-        request in its window.
+        Validates — and defensively copies — the request HERE, not in the
+        batch (serve/engine.py:validate_graph): requests coalesce into
+        shared driver calls, so one malformed graph would otherwise fail
+        (or, with negative ids wrapping, silently corrupt) every request
+        in its window, and a caller mutating its edge array after submit
+        would corrupt the shared batch.
         """
-        e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
-        n = int(n)
-        if n < 1:
-            raise ValueError(f"n must be >= 1, got {n}")
-        if e.size and (e.min() < 0 or e.max() >= n):
-            raise ValueError(
-                f"edge endpoints must lie in [0, {n}), got "
-                f"[{e.min()}, {e.max()}]")
+        from repro.serve.engine import validate_graph
+        e, n = validate_graph(edges, n)
         return self._submit_payload((e, n))
 
     def layout(self, edges, n: int, timeout: float | None = None):
