@@ -111,6 +111,8 @@ def run(kind: str = "full") -> dict:
           f"{res['speedup']}x (bar ≥3x on the 16-graph suite), "
           f"bit_identical={res['bit_identical']}, "
           f"warm compiles={res['batched']['new_compiles']}", flush=True)
+    from repro.obs import metrics as obs_metrics
+    res["metrics"] = obs_metrics.REGISTRY.snapshot()
     return res
 
 

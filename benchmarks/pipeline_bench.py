@@ -102,7 +102,8 @@ def _run_pass(graphs, *, bucketing_on: bool, seed: int = 0) -> dict:
     )
 
 
-def run(kind: str = "small", skip_exact: bool = False) -> dict:
+def run(kind: str = "small", skip_exact: bool = False,
+        trace: str | None = None) -> dict:
     import jax
 
     graphs_cold = suite(kind)
@@ -125,6 +126,38 @@ def run(kind: str = "small", skip_exact: bool = False) -> dict:
     print(f"[pipeline]   {res['bucketed_warm']['seconds']:.1f}s, "
           f"{res['bucketed_warm']['new_compiles']} compiled steps", flush=True)
 
+    if trace:
+        # tracing-overhead measurement: the IDENTICAL warm workload, span
+        # tracer off vs on, in interleaved pairs; min-of-N on each side
+        # strips scheduler/dispatch noise (single warm passes vary by
+        # several %, far above the tracer's real cost — ~100 span records
+        # per pass). Acceptance: within 2% — EXPERIMENTS.md §Observability.
+        from repro.obs import trace as obs_trace
+        pairs = 5
+        print(f"[pipeline] tracing overhead ({pairs} off/on pass pairs)...",
+              flush=True)
+        off_s, on_s = [res["bucketed_warm"]["seconds"]], []
+        traced_pass = None
+        for _ in range(pairs):
+            obs_trace.reset()
+            obs_trace.enable()
+            traced_pass = _run_pass(graphs_warm, bucketing_on=True, seed=1)
+            obs_trace.disable()
+            on_s.append(traced_pass["seconds"])
+            off_s.append(_run_pass(graphs_warm, bucketing_on=True,
+                                   seed=1)["seconds"])
+        obs_trace.export(trace)             # the last traced pass's events
+        res["bucketed_warm_traced"] = traced_pass
+        res["trace_events"] = len(obs_trace.get_tracer())
+        res["trace_seconds_off"] = [round(s, 4) for s in off_s]
+        res["trace_seconds_on"] = [round(s, 4) for s in on_s]
+        res["trace_overhead_pct"] = round(
+            (min(on_s) / min(off_s) - 1) * 100, 2)
+        print(f"[pipeline]   min off {min(off_s):.2f}s, min on "
+              f"{min(on_s):.2f}s ({res['trace_events']} events) → overhead "
+              f"{res['trace_overhead_pct']:+.2f}% — wrote {trace}",
+              flush=True)
+
     if not skip_exact:
         print("[pipeline] exact-shape (pre-refactor) pass...", flush=True)
         res["exact_shape"] = _run_pass(graphs_cold, bucketing_on=False, seed=0)
@@ -137,6 +170,9 @@ def run(kind: str = "small", skip_exact: bool = False) -> dict:
             ex["seconds"] / res["bucketed_warm"]["seconds"], 2)
         print(f"[pipeline] speedup: cold {res['speedup_cold_vs_exact']}x, "
               f"warm {res['speedup_warm_vs_exact']}x", flush=True)
+
+    from repro.obs import metrics as obs_metrics
+    res["metrics"] = obs_metrics.REGISTRY.snapshot()
     return res
 
 
@@ -164,10 +200,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--small", action="store_true")
     ap.add_argument("--skip-exact", action="store_true",
                     help="skip the slow pre-refactor baseline pass")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="rerun the warm suite with the span tracer on, "
+                         "measure the overhead, write the Perfetto trace")
     ap.add_argument("--out", default="BENCH_pipeline.json")
     args = ap.parse_args(argv)
     kind = "smoke" if args.smoke else ("small" if args.small else "full")
-    res = run(kind, skip_exact=args.skip_exact)
+    res = run(kind, skip_exact=args.skip_exact, trace=args.trace or None)
     res["date"] = time.strftime("%Y-%m-%d")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)

@@ -266,6 +266,8 @@ def run(mode: str = "full") -> dict:
         sim=run_sim_mode())
     if mode == "full":
         res["real"] = run_real_mode()
+    from repro.obs import metrics as obs_metrics
+    res["metrics"] = obs_metrics.REGISTRY.snapshot()
     return res
 
 

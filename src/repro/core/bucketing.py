@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 import time
 from functools import partial
 
@@ -45,6 +46,8 @@ import jax.numpy as jnp
 from repro.graphs.graph import PaddedGraph, bucket_pad
 from repro.graphs import packing
 from repro.core import gila
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.utils.transfer import io_boundary
 
 
@@ -74,17 +77,32 @@ def kernel_backend() -> str:
 
 # -- per-phase wall-clock accounting ------------------------------------------
 
-class PhaseTimes:
-    """Accumulates wall-clock per pipeline phase (coarsen/place/refine/
-    compile). ``compile`` is the first call into a cold cache entry — trace
-    + XLA compile + the first execution (inseparable under jit dispatch);
-    merger-superstep compiles land in ``coarsen`` the same way."""
+# storage for the phase accounting lives in the thread-safe metrics
+# registry (obs/metrics.py), one labeled counter series per phase
+PHASE_SECONDS = obs_metrics.REGISTRY.counter(
+    "gila_phase_seconds_total",
+    "Wall-clock seconds per pipeline phase (coarsen/place/refine/compile)",
+    "seconds")
 
-    def __init__(self):
-        self.t: dict[str, float] = {}
+
+class PhaseTimes:
+    """Per-phase wall-clock accounting (coarsen/place/refine/compile).
+    ``compile`` is the first call into a cold cache entry — trace
+    + XLA compile + the first execution (inseparable under jit dispatch);
+    merger-superstep compiles land in ``coarsen`` the same way.
+
+    DEPRECATED facade: the numbers now live in the metrics registry
+    (``gila_phase_seconds_total{phase=...}``), which is lock-protected —
+    the old dict-backed version was mutated from the engine worker thread
+    (host coarsening inside ``EngineCore``) and the caller thread
+    concurrently, a read-modify-write race. The ``PHASES`` alias and its
+    ``add``/``phase``/``snapshot``/``reset`` API are kept so
+    benchmarks/pipeline_bench.py output is unchanged; new code should use
+    ``obs_metrics.REGISTRY`` / ``obs_trace`` directly.
+    """
 
     def add(self, name: str, seconds: float) -> None:
-        self.t[name] = self.t.get(name, 0.0) + seconds
+        PHASE_SECONDS.inc(max(float(seconds), 0.0), phase=name)
 
     @contextlib.contextmanager
     def phase(self, name: str):
@@ -95,10 +113,11 @@ class PhaseTimes:
             self.add(name, time.perf_counter() - t0)
 
     def snapshot(self) -> dict:
-        return dict(self.t)
+        return {dict(k)["phase"]: v
+                for k, v in PHASE_SECONDS.values().items()}
 
     def reset(self) -> None:
-        self.t.clear()
+        PHASE_SECONDS.clear()
 
 
 PHASES = PhaseTimes()
@@ -106,31 +125,46 @@ PHASES = PhaseTimes()
 
 # -- the compile cache ---------------------------------------------------------
 
+CACHE_HITS = obs_metrics.REGISTRY.counter(
+    "gila_compile_cache_hits_total",
+    "Warm lookups of the process-wide compiled-step cache")
+CACHE_MISSES = obs_metrics.REGISTRY.counter(
+    "gila_compile_cache_misses_total",
+    "Cold lookups (each one builds + compiles a new step program)")
+
+
 class CompileCache:
     """Process-wide cache of jitted step functions keyed on shape buckets.
 
     ``get(key, builder)`` returns ``(fn, fresh)``; ``fresh=True`` means the
-    builder ran (the next call of ``fn`` traces and XLA-compiles)."""
+    builder ran (the next call of ``fn`` traces and XLA-compiles).
+    Lock-protected: the engine worker thread and direct callers share one
+    process-wide instance."""
 
     def __init__(self):
         self.entries: dict = {}
         self.hits = 0
         self.misses = 0
+        self._lock = threading.RLock()
 
     def get(self, key, builder):
-        fn = self.entries.get(key)
-        if fn is not None:
-            self.hits += 1
-            return fn, False
-        self.misses += 1
-        fn = builder()
-        self.entries[key] = fn
-        return fn, True
+        with self._lock:
+            fn = self.entries.get(key)
+            if fn is not None:
+                self.hits += 1
+                CACHE_HITS.inc()
+                return fn, False
+            self.misses += 1
+            CACHE_MISSES.inc()
+            fn = builder()
+            self.entries[key] = fn
+            return fn, True
 
     def clear(self) -> None:
-        self.entries.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self.entries.clear()
+            self.hits = 0
+            self.misses = 0
 
 
 STEP_CACHE = CompileCache()
@@ -169,6 +203,18 @@ def jit_cache_entries() -> int:
             except Exception:
                 pass
     return total
+
+
+# callback gauges: sampled at scrape/snapshot time, so a long-running
+# service's /metrics always reports the LIVE cache state
+obs_metrics.REGISTRY.gauge(
+    "gila_compile_cache_entries",
+    "Live compiled-step entries in the process-wide cache",
+    fn=lambda: len(STEP_CACHE.entries))
+obs_metrics.REGISTRY.gauge(
+    "gila_jit_trace_entries",
+    "Total jit trace-cache entries across the driver's tracked functions",
+    fn=jit_cache_entries)
 
 
 # -- the bucketed refinement step ----------------------------------------------
@@ -236,13 +282,18 @@ def refine_level(g: PaddedGraph, pos0, sched, *, ideal_len: float,
             nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
             nbr_mask = jnp.zeros((g.n_pad, 1), bool)
 
-    _, fn, fresh, args = cached_refine(g, pos0, sched, nbr_idx, nbr_mask,
-                                       ideal_len=ideal_len,
-                                       rep_const=rep_const, min_dist=min_dist)
+    key, fn, fresh, args = cached_refine(g, pos0, sched, nbr_idx, nbr_mask,
+                                         ideal_len=ideal_len,
+                                         rep_const=rep_const,
+                                         min_dist=min_dist)
 
+    # the span brackets the existing dispatch + block_until_ready pair —
+    # NO new host↔device sync is introduced by tracing (gilalint-checked)
     t0 = time.perf_counter()
-    pos = fn(*args)
-    pos.block_until_ready()
+    with obs_trace.span("refine.dispatch", cat="device", key=key,
+                        fresh=fresh, mode=sched.mode):
+        pos = fn(*args)
+        pos.block_until_ready()
     PHASES.add("compile" if fresh else "refine", time.perf_counter() - t0)
     return pos
 
@@ -284,7 +335,9 @@ class RefineRequest:
     (static) mode/grid parameters; ``seed`` feeds the neighbor-list build;
     ``inc``/``inc_k`` the incidence-gather table (inc_k = 0 → the program
     aggregates attraction with a flat scatter instead). Build with
-    ``make_request``.
+    ``make_request``. ``level``/``lane`` are observability metadata only
+    (span annotations) — they MUST stay out of ``group_key``, or equal
+    shapes at different hierarchy levels would stop sharing compiles.
     """
     g: PaddedGraph
     pos0: jnp.ndarray
@@ -292,6 +345,8 @@ class RefineRequest:
     seed: int
     inc: jnp.ndarray
     inc_k: int
+    level: int = 0
+    lane: object = None
 
 
 def lane_shape(n: int, m: int) -> tuple[int, int]:
@@ -299,7 +354,8 @@ def lane_shape(n: int, m: int) -> tuple[int, int]:
     return (bucket_pad(n, BATCH_MIN_N), bucket_pad(2 * m, BATCH_MIN_E))
 
 
-def make_request(g: PaddedGraph, pos0, sched, seed: int) -> RefineRequest:
+def make_request(g: PaddedGraph, pos0, sched, seed: int, *, level: int = 0,
+                 lane: object = None) -> RefineRequest:
     """Re-pad one level to its lane bucket and attach the incidence table."""
     n_pad, m_pad = lane_shape(g.n, g.m)
     g2 = packing.repad_graph(g, n_pad, m_pad)
@@ -308,7 +364,8 @@ def make_request(g: PaddedGraph, pos0, sched, seed: int) -> RefineRequest:
         with io_boundary():
             inc, k = jnp.zeros((n_pad, 0), jnp.int32), 0
     return RefineRequest(g=g2, pos0=packing.repad_rows(pos0, n_pad),
-                         sched=sched, seed=seed, inc=inc, inc_k=k)
+                         sched=sched, seed=seed, inc=inc, inc_k=k,
+                         level=int(level), lane=lane)
 
 
 def group_key(req: RefineRequest) -> tuple:
@@ -318,6 +375,34 @@ def group_key(req: RefineRequest) -> tuple:
     cap = s.cap if s.mode == "neighbor" else 1
     return (req.g.n_pad, req.g.m_pad, cap, req.inc_k, s.mode, s.grid_dim,
             s.cell_cap)
+
+
+# padding occupancy — the direct measurement of fragmentation loss: the
+# fraction of each dispatched [lanes, n_pad]/[lanes, m_pad] batch volume
+# holding TRUE vertices/edge-slots rather than pow2 padding. Labeled by
+# the shape bucket (and by lane bucket for the lane axis).
+OCC_VERTICES = obs_metrics.REGISTRY.gauge(
+    "gila_wave_padding_occupancy_vertices",
+    "True vertices / (lanes * n_pad) of the last dispatch per bucket",
+    "ratio")
+OCC_EDGES = obs_metrics.REGISTRY.gauge(
+    "gila_wave_padding_occupancy_edges",
+    "True directed edge slots / (lanes * m_pad) of the last dispatch",
+    "ratio")
+OCC_LANES = obs_metrics.REGISTRY.gauge(
+    "gila_wave_lane_occupancy",
+    "Live lanes / pow2 lane bucket of the last dispatch per bucket",
+    "ratio")
+
+
+def _record_occupancy(reqs: list["RefineRequest"], lanes: int) -> None:
+    n_pad, m_pad = reqs[0].g.n_pad, reqs[0].g.m_pad
+    bucket = f"n{n_pad}_e{m_pad}"
+    OCC_VERTICES.set(sum(r.g.n for r in reqs) / (lanes * n_pad),
+                     bucket=bucket)
+    OCC_EDGES.set(sum(2 * r.g.m for r in reqs) / (lanes * m_pad),
+                  bucket=bucket)
+    OCC_LANES.set(len(reqs) / lanes, bucket=bucket)
 
 
 def _build_refine_many(mode: str, grid_dim: int, cell_cap: int, inc_k: int):
@@ -452,6 +537,7 @@ def cached_refine_many(reqs: list[RefineRequest], nbrs: list[tuple], *,
     b = len(reqs)
     lanes = packing.lane_bucket(b, lanes_min)
     packed = packing.pack_graphs([r.g for r in reqs], lanes=lanes)
+    _record_occupancy(reqs, lanes)
     with io_boundary():                     # intentional host→device staging
         pl = lambda a: packing.pad_lanes(a, b, lanes)
         pos0 = pl(jnp.stack([jnp.asarray(r.pos0) for r in reqs]))
@@ -522,12 +608,15 @@ def refine_level_many(reqs: list[RefineRequest], *, ideal_len: float,
                  jnp.zeros((reqs[0].g.n_pad, 1), bool))
         nbrs = [z] * len(reqs)
 
-    _, fn, fresh, args = cached_refine_many(
+    key, fn, fresh, args = cached_refine_many(
         reqs, nbrs, ideal_len=ideal_len, rep_const=rep_const,
         min_dist=min_dist, lanes_min=lanes_min)
+    # span brackets the existing dispatch + sync only (no added syncs)
     t0 = time.perf_counter()
-    out = fn(*args)
-    out.block_until_ready()
+    with obs_trace.span("refine_many.dispatch", cat="device", key=key,
+                        fresh=fresh, lanes=len(reqs)):
+        out = fn(*args)
+        out.block_until_ready()
     PHASES.add("compile" if fresh else "refine", time.perf_counter() - t0)
     b = len(reqs)
     with io_boundary():                     # egress: unpack the live lanes

@@ -28,6 +28,10 @@ from repro.core.solar_merger import run_merger, next_level, LevelInfo
 from repro.core.solar_placer import solar_placer
 from repro.core import gila, bucketing
 from repro.core.bucketing import PHASES
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.clock import Clock, SystemClock
+from repro.utils.timing import StepTimer
 from repro.utils.transfer import io_boundary
 from repro.core.schedule import make_schedule, LevelSchedule
 from repro.core.pruning import prune_degree_one, reinsert
@@ -263,7 +267,8 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
         stats.level_sizes = ((g0.n, g0.m),)
         return ret(np.asarray(pos)[:n], stats)
 
-    with PHASES.phase("coarsen"):
+    with PHASES.phase("coarsen"), obs_trace.span("coarsen", cat="host",
+                                                 n=g0.n, m=g0.m):
         graphs, infos = build_hierarchy(g0, cfg)
     L = len(graphs)
     stats.levels = L
@@ -279,12 +284,14 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
                           finest_iters=cfg.finest_iters,
                           ideal_len=cfg.ideal_len, n_pad=gk.n_pad)
     pos = gila.random_init(gk, cfg.ideal_len * max(gk.n, 4) ** 0.5, cfg.seed)
-    pos = _layout_one_level(gk, pos, sched, cfg, cfg.seed + L)
+    with obs_trace.span("refine.level", level=L - 1, n=gk.n):
+        pos = _layout_one_level(gk, pos, sched, cfg, cfg.seed + L)
 
     # walk the hierarchy back down: place, then refine
     for i in range(L - 2, -1, -1):
         gi = graphs[i]
-        with PHASES.phase("place"):
+        with PHASES.phase("place"), obs_trace.span("place", cat="host",
+                                                   level=i):
             pos = solar_placer(gi, infos[i], pos, seed=cfg.seed + i,
                                scatter_scale=0.5 * cfg.ideal_len)
             pos.block_until_ready()         # keep device time in-phase
@@ -293,7 +300,8 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
                               coarsest_iters=cfg.coarsest_iters,
                               finest_iters=cfg.finest_iters,
                               ideal_len=cfg.ideal_len, n_pad=gi.n_pad)
-        pos = _layout_one_level(gi, pos, sched, cfg, cfg.seed + i)
+        with obs_trace.span("refine.level", level=i, n=gi.n):
+            pos = _layout_one_level(gi, pos, sched, cfg, cfg.seed + i)
 
     pos = np.asarray(pos, np.float32)[: g0.n]
     if pr is not None:
@@ -397,10 +405,12 @@ class _ComponentTask:
     every fed-back position bit-identical to the sequential driver's.
     """
 
-    def __init__(self, edges: np.ndarray, n: int, cfg: LayoutConfig):
+    def __init__(self, edges: np.ndarray, n: int, cfg: LayoutConfig,
+                 lane: object = None):
         self.cfg = cfg
         self.stats = LayoutStats()
         self.n = n
+        self.lane = lane             # observability label: "<job_uid>.<comp>"
         self.final: np.ndarray | None = None
         self.pr = None
         if n == 1:
@@ -420,7 +430,8 @@ class _ComponentTask:
                           else np.zeros((n, 2), np.float32))
             return
         self.g0 = build_graph(self.work_edges, work_n, mass=mass, bucket=True)
-        with PHASES.phase("coarsen"):
+        with PHASES.phase("coarsen"), obs_trace.span(
+                "coarsen", cat="host", lane=lane, n=self.g0.n, m=self.g0.m):
             self.graphs, self.infos = build_hierarchy(self.g0, cfg)
         L = len(self.graphs)
         self.stats.levels = L
@@ -452,13 +463,15 @@ class _ComponentTask:
                                     cfg.seed)
             seed = cfg.seed + L
         else:
-            with PHASES.phase("place"):
+            with PHASES.phase("place"), obs_trace.span(
+                    "place", cat="host", level=i, lane=self.lane):
                 pos0 = solar_placer(gi, self.infos[i], self._pos,
                                     seed=cfg.seed + i,
                                     scatter_scale=0.5 * cfg.ideal_len)
                 pos0.block_until_ready()
             seed = cfg.seed + i
-        return bucketing.make_request(gi, pos0, self._sched(i), seed)
+        return bucketing.make_request(gi, pos0, self._sched(i), seed,
+                                      level=i, lane=self.lane)
 
     def feed(self, pos) -> None:
         """Accept the refined positions of the current level; finalize
@@ -486,20 +499,23 @@ class GraphJob:
     without touching any sibling lane's floats.
     """
 
-    def __init__(self, edges: np.ndarray, n: int, cfg: LayoutConfig):
+    def __init__(self, edges: np.ndarray, n: int, cfg: LayoutConfig, *,
+                 uid: int = -1):
         self.cfg = cfg
         self.n = int(n)
-        self.cancelled = False
+        self.uid = int(uid)          # scheduler-local admission rank: lane
+        self.cancelled = False       # labels stay deterministic across runs
         edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
         labels = connected_components(edges, self.n)
         self.tasks, self.index_maps = [], []
-        for c in np.unique(labels):
+        for k, c in enumerate(np.unique(labels)):
             vs = np.nonzero(labels == c)[0]
             remap = np.full(self.n, -1, np.int64)
             remap[vs] = np.arange(vs.size)
             emask = labels[edges[:, 0]] == c
             ce = np.stack([remap[edges[emask, 0]], remap[edges[emask, 1]]], 1)
-            self.tasks.append(_ComponentTask(ce, vs.size, cfg))
+            self.tasks.append(_ComponentTask(ce, vs.size, cfg,
+                                             lane=f"{self.uid}.{k}"))
             self.index_maps.append(vs)
 
     @property
@@ -526,6 +542,26 @@ class GraphJob:
         for vs, P in zip(self.index_maps, packed):
             pos[vs] = P
         return pos, stats
+
+
+# wave-composition metrics (DESIGN.md §12): counted at dispatch so both
+# the one-shot batched driver and the continuous engine feed them
+WAVES_TOTAL = obs_metrics.REGISTRY.counter(
+    "gila_waves_total", "Dispatched waves (>= 1 lane)")
+LANE_DISPATCHES_TOTAL = obs_metrics.REGISTRY.counter(
+    "gila_lane_dispatches_total", "Per-level lane refinements dispatched")
+PREEMPTED_LANES_TOTAL = obs_metrics.REGISTRY.counter(
+    "gila_preempted_lanes_total",
+    "Lanes held past a wave because the wave cap was full")
+STRAGGLER_WAVES_TOTAL = obs_metrics.REGISTRY.counter(
+    "gila_straggler_waves_total",
+    "Waves slower than the StepTimer EWMA threshold")
+WAVE_GROUPS_HIST = obs_metrics.REGISTRY.histogram(
+    "gila_wave_groups", "Shape-bucket groups per dispatched wave",
+    buckets=(1, 2, 3, 4, 6, 8, 12, 16, 24, 32))
+GROUP_LANES_HIST = obs_metrics.REGISTRY.histogram(
+    "gila_group_lanes", "Member lanes per dispatched shape-bucket group",
+    buckets=(1, 2, 4, 8, 16, 32, 64, 128))
 
 
 class WaveScheduler:
@@ -555,7 +591,9 @@ class WaveScheduler:
     """
 
     def __init__(self, cfg: LayoutConfig | None = None, *,
-                 lanes_cap: int | None = None, dispatch=None):
+                 lanes_cap: int | None = None, dispatch=None,
+                 tracer: "obs_trace.Tracer | None" = None,
+                 clock: Clock | None = None):
         cfg = cfg or LayoutConfig()
         if cfg.engine != "multigila":
             raise ValueError("WaveScheduler supports engine='multigila' "
@@ -564,19 +602,32 @@ class WaveScheduler:
             raise ValueError("WaveScheduler requires cfg.bucketing=True")
         self.cfg = cfg
         self.lanes_cap = lanes_cap
+        # tracer/clock seam: the engine passes ITS clock so wave spans and
+        # straggler timing share the sim's virtual frame (a VirtualClock
+        # never advances inside step(), so sim wave dt is exactly 0 and
+        # straggler detection can never fire nondeterministically)
+        self.tracer = tracer if tracer is not None else obs_trace.get_tracer()
+        self.clock = clock or SystemClock()
+        self._wave_timer = StepTimer()
         self._dispatch = dispatch or (lambda reqs: bucketing.refine_level_many(
             reqs, ideal_len=cfg.ideal_len, rep_const=cfg.rep_const,
             lanes_cap=lanes_cap))
         self._jobs: list[GraphJob] = []
         self._staged: dict = {}       # _ComponentTask -> RefineRequest
+        self._next_uid = 0
         self.waves = 0
         self.lane_dispatches = 0
+        self.straggler_waves = 0
 
     def admit(self, edges, n: int, *, seed: int | None = None) -> GraphJob:
         """Add one graph to the lane set (legal at any wave boundary)."""
         cfg = (self.cfg if seed is None
                else dataclasses.replace(self.cfg, seed=int(seed)))
-        job = GraphJob(edges, n, cfg)
+        # lane labels derive from the scheduler-local admission rank, not
+        # any global counter — two fresh runs of the same script produce
+        # identical labels (trace replay determinism, tests/test_obs.py)
+        job = GraphJob(edges, n, cfg, uid=self._next_uid)
+        self._next_uid += 1
         self._jobs.append(job)
         return job
 
@@ -597,8 +648,9 @@ class WaveScheduler:
         return sum(j.lanes for j in self._jobs)
 
     def step(self, *, order=None, max_lanes: int | None = None) -> dict:
-        """Dispatch one wave; returns ``{"lanes", "groups"}`` where
-        ``groups`` lists ``(group_key, member_count)`` in dispatch order.
+        """Dispatch one wave; returns ``{"lanes", "groups", "preempted"}``
+        where ``groups`` lists ``(group_key, member_count)`` in dispatch
+        order and ``preempted`` counts lanes held past this wave by the cap.
 
         ``order``: job sort key (ascending; stable, so admit order breaks
         ties). ``max_lanes``: only the first that-many lanes ride."""
@@ -614,22 +666,49 @@ class WaveScheduler:
                 if r is None:
                     r = self._staged[t] = t.next_request()
                 pend.append((t, r))
+        preempted = 0
         if max_lanes is not None:
+            preempted = max(0, len(pend) - max_lanes)
             pend = pend[:max_lanes]
         groups: dict = {}
         for t, r in pend:
             groups.setdefault(bucketing.group_key(r), []).append((t, r))
+        tw0 = self.clock.now()
         ginfo = []
         for key, members in groups.items():
+            tg0 = self.clock.now()
             outs = self._dispatch([r for _, r in members])
-            for (t, _), pos in zip(members, outs):
+            tg1 = self.clock.now()
+            for (t, r), pos in zip(members, outs):
                 del self._staged[t]
                 t.feed(pos)
+                # per-lane share of the fused group dispatch: same bounds
+                # as the group span, annotated with level/lane so phase
+                # sums and host/device overlap are computable per lane
+                self.tracer.complete("refine", tg0, tg1, cat="wave",
+                                     level=r.level, lane=r.lane)
+            self.tracer.complete("refine.group", tg0, tg1, cat="wave",
+                                 bucket=key, lanes=len(members))
+            GROUP_LANES_HIST.observe(len(members))
             ginfo.append((key, len(members)))
         if pend:
+            tw1 = self.clock.now()
             self.waves += 1
             self.lane_dispatches += len(pend)
-        return {"lanes": len(pend), "groups": ginfo}
+            WAVES_TOTAL.inc()
+            LANE_DISPATCHES_TOTAL.inc(len(pend))
+            WAVE_GROUPS_HIST.observe(len(ginfo))
+            if preempted:
+                PREEMPTED_LANES_TOTAL.inc(preempted)
+            self.tracer.complete("wave", tw0, tw1, cat="wave",
+                                 lanes=len(pend), groups=ginfo,
+                                 preempted=preempted)
+            if self._wave_timer.record(tw1 - tw0):
+                self.straggler_waves += 1
+                STRAGGLER_WAVES_TOTAL.inc()
+                self.tracer.instant("wave.straggler", ts=tw1, cat="wave",
+                                    dur=tw1 - tw0, ewma=self._wave_timer.ewma)
+        return {"lanes": len(pend), "groups": ginfo, "preempted": preempted}
 
     def drain(self) -> None:
         """Step until every admitted job has finished."""

@@ -12,6 +12,10 @@ device program per level wave — and reports graphs/sec;
 ``--many-compare`` additionally runs the sequential single-graph driver
 over the same requests and checks per-graph bit-identity (DESIGN.md §9,
 benchmarks/many_bench.py for the measured suite).
+
+``--trace out.json`` records a Chrome/Perfetto span timeline of the run
+(coarsen/place/refine per level — per lane under ``--many``; open in
+https://ui.perfetto.dev, DESIGN.md §12).
 """
 from __future__ import annotations
 
@@ -48,7 +52,13 @@ def main(argv=None):
     ap.add_argument("--many-compare", action="store_true",
                     help="with --many: also run the sequential driver and "
                          "check per-graph bit-identity")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="write a Chrome/Perfetto trace of the run")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable()
 
     edges, n, gargs = generators.from_cli(args.graph, args.args)
     print(f"graph {args.graph}{gargs}: n={n} m={len(edges)}")
@@ -92,6 +102,11 @@ def main(argv=None):
     if args.svg:
         save_svg(args.svg, pos, edges)
         print(f"wrote {args.svg}")
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.export(args.trace)
+        print(f"wrote trace to {args.trace} "
+              f"({len(obs_trace.get_tracer())} events)")
     return rep
 
 

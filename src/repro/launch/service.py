@@ -15,7 +15,13 @@ always-on engine, requests joining the wave scheduler mid-flight
         → 429 admission queue full       (bounded-queue backpressure)
         → 504 deadline exceeded / timeout
     GET  /healthz  → 200 ok
-    GET  /stats    → engine counters + compile-cache stats
+    GET  /stats    → engine counters + compile-cache stats (JSON)
+    GET  /metrics  → Prometheus text exposition of the metrics registry
+                     (cache hit/miss, padding occupancy, queue depth,
+                     latency histograms — DESIGN.md §12)
+
+``--trace out.json`` enables the span tracer for the server's lifetime
+and writes a Chrome/Perfetto trace-event timeline on shutdown.
 
 ``--smoke`` starts the server on an ephemeral port, POSTs a few graphs
 from client threads, asserts the responses, and shuts down (CI-friendly
@@ -61,6 +67,15 @@ def make_server(svc, host: str = "127.0.0.1", port: int = 0,
                 from repro.core import bucketing
                 self._json(200, {"engine": svc.stats(),
                                  "compile_cache": bucketing.cache_stats()})
+            elif self.path == "/metrics":
+                from repro.obs import metrics as obs_metrics
+                body = obs_metrics.REGISTRY.to_prometheus().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
             else:
                 self._json(404, {"error": f"no route {self.path}"})
 
@@ -145,8 +160,14 @@ def smoke() -> None:
         with urllib.request.urlopen(f"http://{host}:{port}/stats",
                                     timeout=60) as resp:
             stats = json.loads(resp.read())
-        assert stats["engine"]["completed"] == 3, stats
-        print(f"[service] smoke OK: {stats['engine']}", flush=True)
+        assert stats["engine"]["completed"] == 3, stats["engine"]["completed"]
+        with urllib.request.urlopen(f"http://{host}:{port}/metrics",
+                                    timeout=60) as resp:
+            prom = resp.read().decode()
+        assert "gila_compile_cache_hits_total" in prom, prom[:400]
+        assert "gila_wave_padding_occupancy_vertices" in prom, prom[:400]
+        eng = {k: v for k, v in stats["engine"].items() if k != "metrics"}
+        print(f"[service] smoke OK: {eng}", flush=True)
     finally:
         httpd.shutdown()
         svc.close()
@@ -161,6 +182,9 @@ def main(argv=None) -> None:
     ap.add_argument("--max-queue", type=int, default=256,
                     help="admission queue bound (backpressure above it)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="record a Chrome/Perfetto trace for the server's "
+                         "lifetime; written on shutdown")
     ap.add_argument("--smoke", action="store_true",
                     help="serve 3 graphs over HTTP on an ephemeral port, "
                          "assert parity, exit")
@@ -170,8 +194,11 @@ def main(argv=None) -> None:
         return
 
     from repro.core import LayoutConfig
+    from repro.obs import trace as obs_trace
     from repro.serve.engine import ContinuousLayoutService
 
+    if args.trace:
+        obs_trace.enable()
     svc = ContinuousLayoutService(LayoutConfig(seed=args.seed),
                                   max_queue=args.max_queue,
                                   max_lanes=args.max_lanes)
@@ -187,6 +214,9 @@ def main(argv=None) -> None:
     finally:
         httpd.shutdown()
         svc.close()
+        if args.trace:
+            obs_trace.export(args.trace)
+            print(f"[service] wrote trace to {args.trace}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,19 @@
+"""Unified observability layer: span tracing + metrics (DESIGN.md §12).
+
+  * ``obs.clock``   — the ``Clock`` seam (System/Virtual) every
+    timestamp in the stack reads through;
+  * ``obs.trace``   — structured span tracer exporting Chrome/Perfetto
+    trace-event JSON (``--trace out.json`` on the drivers);
+  * ``obs.metrics`` — typed counter/gauge/histogram registry exported as
+    Prometheus text (``GET /metrics``) and as JSON in ``BENCH_*.json``.
+
+This package sits BELOW core/serve/launch in the import graph (it
+imports nothing from them), so any module can instrument itself without
+cycles.
+"""
+from repro.obs.clock import Clock, SystemClock, VirtualClock
+from repro.obs.trace import TRACER, Tracer, get_tracer
+from repro.obs.metrics import REGISTRY, Registry
+
+__all__ = ["Clock", "SystemClock", "VirtualClock", "Tracer", "TRACER",
+           "get_tracer", "Registry", "REGISTRY"]

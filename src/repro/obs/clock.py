@@ -1,0 +1,49 @@
+"""The process-wide time-source seam (DESIGN.md §12).
+
+Everything that timestamps — the continuous-batching engine
+(serve/engine.py), the span tracer (obs/trace.py), and the wave
+scheduler's straggler detector (core/multilevel.py) — reads time ONLY
+through a ``Clock``. Production code gets ``SystemClock`` (monotonic);
+the simulation rig swaps in ``VirtualClock``, which moves only when the
+test advances it. That single seam is what makes a scripted
+``VirtualClock`` service run replay to a *byte-identical* trace file:
+with no wall-clock reads anywhere on the timestamp path, two runs of the
+same trace produce the same floats (tests/test_obs.py).
+
+These classes lived in serve/engine.py until the observability layer
+needed them too; serve/engine re-exports them, so existing imports keep
+working.
+"""
+from __future__ import annotations
+
+import time
+
+
+class Clock:
+    """Time source seam: timestamping code never reads the wall clock
+    directly."""
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+
+class SystemClock(Clock):
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class VirtualClock(Clock):
+    """Manually-advanced clock for deterministic simulation: time moves
+    only when the test rig says so, so every latency/deadline/backpressure
+    behavior — and every trace timestamp — is assertable without timing
+    slack."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        assert dt >= 0, dt
+        self._t += float(dt)

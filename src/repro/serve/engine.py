@@ -36,12 +36,16 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
-import time
 from concurrent.futures import Future
 
 import numpy as np
 
 from repro.core.multilevel import LayoutConfig, WaveScheduler
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+# the Clock seam moved to obs/clock.py (the tracer shares it); re-exported
+# here because engine callers import it from this module
+from repro.obs.clock import Clock, SystemClock, VirtualClock
 
 
 class EngineBusy(RuntimeError):
@@ -73,34 +77,21 @@ def validate_graph(edges, n: int) -> tuple[np.ndarray, int]:
     return e, n
 
 
-# -- the clock seam ------------------------------------------------------------
+# -- engine metrics (DESIGN.md §12) -------------------------------------------
 
-class Clock:
-    """Time source seam: the engine never reads the wall clock directly."""
-
-    def now(self) -> float:
-        raise NotImplementedError
-
-
-class SystemClock(Clock):
-    def now(self) -> float:
-        return time.monotonic()
-
-
-class VirtualClock(Clock):
-    """Manually-advanced clock for deterministic simulation: time moves
-    only when the test rig says so, so every latency/deadline/backpressure
-    behavior is assertable without timing slack."""
-
-    def __init__(self, t0: float = 0.0):
-        self._t = float(t0)
-
-    def now(self) -> float:
-        return self._t
-
-    def advance(self, dt: float) -> None:
-        assert dt >= 0, dt
-        self._t += float(dt)
+ENGINE_REQUESTS = obs_metrics.REGISTRY.counter(
+    "gila_engine_requests_total",
+    "Engine request transitions, labeled by event "
+    "(submitted/rejected/admitted/completed/expired/cancelled)")
+QUEUE_DEPTH = obs_metrics.REGISTRY.gauge(
+    "gila_engine_queue_depth", "Admission-queue depth (last observed)")
+QUEUE_DEPTH_HWM = obs_metrics.REGISTRY.gauge(
+    "gila_engine_queue_depth_hwm",
+    "Admission-queue high-water mark since engine start")
+REQUEST_LATENCY = obs_metrics.REGISTRY.histogram(
+    "gila_request_latency_seconds",
+    "End-to-end submit-to-complete latency of finished requests",
+    "seconds")
 
 
 # -- requests ------------------------------------------------------------------
@@ -156,19 +147,25 @@ class EngineCore:
     def __init__(self, cfg: LayoutConfig | None = None, *,
                  clock: Clock | None = None, max_queue: int = 64,
                  max_lanes: int = 32, wave_lanes: int | None = None,
-                 dispatch=None):
+                 dispatch=None, tracer: "obs_trace.Tracer | None" = None):
         assert max_lanes >= 1 and max_queue >= 1
         self.clock = clock or SystemClock()
+        # engine clock and tracer are handed to the scheduler so wave
+        # spans, straggler timing, and the scheduling-log instants all
+        # share ONE time frame (virtual under sim → replayable traces)
+        self.tracer = tracer if tracer is not None else obs_trace.get_tracer()
         self.max_queue = int(max_queue)
         self.max_lanes = int(max_lanes)
         self.wave_lanes = int(wave_lanes or max_lanes)
         self.sched = WaveScheduler(cfg, lanes_cap=self.wave_lanes,
-                                   dispatch=dispatch)
+                                   dispatch=dispatch, tracer=self.tracer,
+                                   clock=self.clock)
         self._lock = threading.Lock()
         self._queue: list[LayoutRequest] = []
         self._running: list[LayoutRequest] = []
         self._req_of_job: dict = {}
         self._next_rid = 0
+        self._queue_hwm = 0
         self.log: list[tuple] = []
         self.counters = dict(submitted=0, rejected=0, admitted=0,
                              completed=0, expired=0, cancelled=0, waves=0)
@@ -187,7 +184,7 @@ class EngineCore:
             rid = self._next_rid
             self._next_rid += 1
             if len(self._queue) >= self.max_queue:
-                self.counters["rejected"] += 1
+                self._count("rejected")
                 self._log("reject", t, rid, queue=len(self._queue))
                 raise EngineBusy(
                     f"admission queue full ({self.max_queue} pending)")
@@ -198,10 +195,12 @@ class EngineCore:
                 deadline=None if deadline_s is None else t + float(deadline_s),
                 t_submit=t, future=Future())
             self._queue.append(req)
-            self.counters["submitted"] += 1
+            self._count("submitted")
+            self._queue_hwm = max(self._queue_hwm, len(self._queue))
             self._log("submit", t, rid, priority=req.priority,
                       deadline=None if req.deadline is None
                       else round(req.deadline, 9))
+            self._sample_queue_depth(t)
         return req
 
     def cancel(self, req: LayoutRequest) -> bool:
@@ -222,11 +221,17 @@ class EngineCore:
             return False
 
     def stats(self) -> dict:
+        """Engine counters + a metrics-registry snapshot, taken atomically
+        under the engine lock (no transition can interleave between the
+        counter reads and the snapshot)."""
         with self._lock:
             d = dict(self.counters)
             d.update(queued=len(self._queue), running=len(self._running),
                      lanes_live=self.sched.lanes_live(),
-                     max_lanes=self.max_lanes, max_queue=self.max_queue)
+                     max_lanes=self.max_lanes, max_queue=self.max_queue,
+                     queue_depth_hwm=self._queue_hwm,
+                     straggler_waves=self.sched.straggler_waves,
+                     metrics=obs_metrics.REGISTRY.snapshot())
         return d
 
     @property
@@ -283,8 +288,9 @@ class EngineCore:
                 req.status = "running"
                 self._running.append(req)
                 self._req_of_job[job] = req
-                self.counters["admitted"] += 1
+                self._count("admitted")
                 self._log("admit", t, req.rid, lanes=len(job.tasks))
+                self._sample_queue_depth(t)
             out["admitted"] += 1
 
         if self.sched.active:
@@ -332,23 +338,41 @@ class EngineCore:
         req.status = status
         req.t_done = t
         if status == "done":
-            self.counters["completed"] += 1
+            self._count("completed")
+            REQUEST_LATENCY.observe(t - req.t_submit)
+            # request-lifetime span on the shared timeline (explicit
+            # engine-clock bounds, so it is sim-replayable)
+            self.tracer.complete("request", req.t_submit, t, cat="engine",
+                                 rid=req.rid)
             if req.future.set_running_or_notify_cancel():
                 req.future.set_result(result)
         elif status == "expired":
-            self.counters["expired"] += 1
+            self._count("expired")
             if req.future.set_running_or_notify_cancel():
                 req.future.set_exception(DeadlineExceeded(
                     f"request {req.rid} missed its deadline"))
         elif status == "cancelled":
-            self.counters["cancelled"] += 1
+            self._count("cancelled")
             req.future.cancel()
         else:                                   # pragma: no cover
             raise AssertionError(status)
 
+    def _count(self, event: str) -> None:
+        self.counters[event] += 1
+        ENGINE_REQUESTS.inc(event=event)
+
+    def _sample_queue_depth(self, t: float) -> None:
+        # caller holds self._lock
+        QUEUE_DEPTH.set(len(self._queue))
+        QUEUE_DEPTH_HWM.set(self._queue_hwm)
+        self.tracer.counter("engine.queue_depth", len(self._queue), ts=t)
+
     def _log(self, kind: str, t: float, rid: int, **detail) -> None:
         self.log.append((round(float(t), 9), kind, int(rid),
                          tuple(sorted(detail.items()))))
+        # mirror the scheduling log onto the trace timeline as instants
+        self.tracer.instant("engine." + kind, ts=t, cat="engine", rid=rid,
+                            **detail)
 
 
 # -- the deterministic simulation rig ------------------------------------------
@@ -498,7 +522,10 @@ class ContinuousLayoutService:
         self._wake = threading.Event()
         self._lifecycle = threading.Lock()
         self._closed = False
-        self._worker = threading.Thread(target=self._run, daemon=True)
+        # named so the tracer renders the engine's track stably (tids are
+        # assigned from thread names, obs/trace.py)
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="engine-worker")
         self._worker.start()
 
     def submit(self, edges, n: int, *, priority: int = 0,

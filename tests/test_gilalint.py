@@ -32,6 +32,20 @@ def test_rule_fires_on_bad_fixture_only(rule):
     assert good_findings == [], good_findings
 
 
+def test_obs_hooks_stay_out_of_traced_contexts():
+    """Observability instrumentation must be host-side only: a metric
+    observation or span argument that forces a traced value to host is an
+    R3 finding; the production pattern — span around the driver's existing
+    dispatch + block_until_ready, metrics fed after the sync — is clean
+    (and test_repo_tree_is_clean holds that line for the real tree)."""
+    bad = lint_paths([str(FIXTURES / "r3_obs_bad.py")], mesh_axes=MESH_AXES)
+    good = lint_paths([str(FIXTURES / "r3_obs_good.py")], mesh_axes=MESH_AXES)
+    assert bad, "seeded obs-in-step violations not detected"
+    assert {f.rule for f in bad} == {"R3"}, bad
+    assert any("float" in f.message for f in bad)
+    assert good == [], good
+
+
 def test_r2_distinguishes_ambient_from_free_name():
     findings = lint_paths([str(FIXTURES / "r2_bad.py")])
     msgs = "\n".join(f.message for f in findings)

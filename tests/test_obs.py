@@ -1,0 +1,275 @@
+"""Observability layer tests (DESIGN.md §12): tracer fast path and export
+determinism, metrics registry + Prometheus exposition, padding-occupancy
+hand checks, the PHASES thread-safety fix, and the engine stats snapshot."""
+import json
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import LayoutConfig, bucketing
+from repro.core.schedule import make_schedule
+from repro.graphs import generators as G
+from repro.graphs.graph import build_graph, bucket_pad
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.clock import SystemClock, VirtualClock
+from repro.serve.engine import (EngineCore, SimEvent, null_dispatch, run_sim)
+
+
+# -- tracer basics -------------------------------------------------------------
+
+def test_disabled_tracer_emits_nothing_and_allocates_no_contexts():
+    tr = obs_trace.Tracer()
+    assert not tr.enabled
+    # the fast path returns ONE shared nullcontext — identity, not just
+    # equality — so a disabled span costs no allocation
+    assert tr.span("a") is tr.span("b", x=1)
+    with tr.span("a"):
+        pass
+    tr.instant("i", x=1)
+    tr.counter("c", 3)
+    tr.complete("r", 0.0, 1.0)
+    assert len(tr) == 0
+    # the module-level hooks share the same fast path object
+    assert not obs_trace.TRACER.enabled
+    assert obs_trace.span("a") is tr.span("b")
+
+
+def test_span_nesting_and_export_shape():
+    vc = VirtualClock()
+    tr = obs_trace.Tracer(clock=vc, enabled=True)
+    with tr.span("outer", cat="host", level=1):
+        vc.advance(1.0)
+        with tr.span("inner", key=(64, 512)):
+            vc.advance(0.5)
+    tr.instant("mark", ts=0.25, rid=3)
+    tr.counter("depth", 2, ts=0.25)
+    d = tr.to_dict()
+    evs = d["traceEvents"]
+    assert all(e["pid"] == 1 for e in evs)
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {m["name"] for m in meta} == {"process_name", "thread_name"}
+    by_name = {e["name"]: e for e in evs if e["ph"] != "M"}
+    # inner closed first; both carry µs timestamps and durations
+    assert by_name["inner"]["ts"] == 1.0e6
+    assert by_name["inner"]["dur"] == 0.5e6
+    assert by_name["outer"]["ts"] == 0.0
+    assert by_name["outer"]["dur"] == 1.5e6
+    assert by_name["outer"]["args"] == {"level": 1}
+    assert by_name["inner"]["args"] == {"key": [64, 512]}  # json-safe tuples
+    assert by_name["mark"]["ph"] == "i" and by_name["mark"]["ts"] == 0.25e6
+    assert by_name["depth"]["ph"] == "C"
+    json.loads(tr.json_bytes())             # valid JSON document
+
+
+def test_tracer_thread_tracks_use_names_not_os_ids():
+    tr = obs_trace.Tracer(clock=VirtualClock(), enabled=True)
+
+    def work():
+        tr.instant("from-worker")
+
+    t = threading.Thread(target=work, name="engine-worker")
+    t.start()
+    t.join()
+    tr.instant("from-main")
+    evs = tr.to_dict()["traceEvents"]
+    names = {e["args"]["name"]: e["tid"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert set(names) == {"engine-worker", "MainThread"}
+    by = {e["name"]: e for e in evs if e["ph"] == "i"}
+    assert by["from-worker"]["tid"] == names["engine-worker"]
+    assert by["from-main"]["tid"] == names["MainThread"]
+
+
+# -- metrics registry ----------------------------------------------------------
+
+def test_registry_families_and_prometheus_text():
+    r = obs_metrics.Registry()
+    c = r.counter("t_hits_total", "hits", "")
+    c.inc(); c.inc(2, kind="warm")
+    g = r.gauge("t_ratio", "a ratio", "ratio")
+    g.set(0.5, bucket="n64")
+    h = r.histogram("t_lat_seconds", "latency", "seconds", buckets=(0.1, 1.0))
+    h.observe(0.05); h.observe(0.5); h.observe(2.0)
+    cb = r.gauge("t_live", "callback", fn=lambda: 7)
+    assert c.value() == 1.0 and c.value(kind="warm") == 2.0
+    assert cb.value() == 7.0
+    st = h.stats()
+    assert st["count"] == 3 and st["sum"] == pytest.approx(2.55)
+    assert st["buckets"] == {"0.1": 1, "1": 2}      # cumulative
+    text = r.to_prometheus()
+    assert "# TYPE t_hits_total counter" in text
+    assert 't_hits_total{kind="warm"} 2' in text
+    assert 't_ratio{bucket="n64"} 0.5' in text
+    assert 't_lat_seconds_bucket{le="+Inf"} 3' in text
+    assert "t_lat_seconds_count 3" in text
+    assert "t_live 7" in text
+    # registration is idempotent; re-registering returns the same family
+    assert r.counter("t_hits_total") is c
+    # snapshot is JSON-able and reset zeroes values but keeps families
+    json.dumps(r.snapshot())
+    r.reset()
+    assert c.value(kind="warm") == 0.0 and r.get("t_lat_seconds") is h
+    assert cb.value() == 7.0                        # callbacks survive reset
+
+
+def test_phase_times_is_thread_safe():
+    """The PR 7 race regression: concurrent PHASES.add from many threads
+    must lose no update (the old dict read-modify-write could)."""
+    before = bucketing.PHASES.snapshot().get("hammer", 0.0)
+    N, K = 8, 2000
+
+    def work():
+        for _ in range(K):
+            bucketing.PHASES.add("hammer", 1.0)
+
+    ts = [threading.Thread(target=work) for _ in range(N)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    after = bucketing.PHASES.snapshot()["hammer"]
+    assert after - before == N * K                  # 1.0 sums are exact
+
+
+# -- padding occupancy ---------------------------------------------------------
+
+def _path_request(n, seed=0):
+    edges = np.stack([np.arange(n - 1), np.arange(1, n)], 1)
+    g = build_graph(edges, n, bucket=True)
+    sched = make_schedule(0, 1, g.n, g.m, exact_threshold=2048,
+                          grid_threshold=32768, coarsest_iters=5,
+                          ideal_len=1.0, n_pad=g.n_pad)
+    pos0 = np.zeros((g.n_pad, 2), np.float32)
+    return bucketing.make_request(g, pos0, sched, seed), edges
+
+
+def test_padding_occupancy_gauges_match_hand_computed():
+    """Mixed-bucket 3-graph wave: two paths share the n64 lane bucket, the
+    third lands in n128; the gauges must equal true/padded exactly."""
+    (r1, e1), (r2, e2), (r3, e3) = (_path_request(10), _path_request(20),
+                                    _path_request(100))
+    assert bucketing.group_key(r1) == bucketing.group_key(r2)
+    assert bucketing.group_key(r3) != bucketing.group_key(r1)
+
+    bucketing.refine_level_many([r1, r2], ideal_len=1.0, rep_const=1.0)
+    lanes = 8                                       # lane_bucket(2, 8)
+    n_pad, m_pad = r1.g.n_pad, r1.g.m_pad
+    assert (n_pad, m_pad) == (bucket_pad(10, 64), bucket_pad(2 * 9, 512))
+    occ_v = obs_metrics.REGISTRY.get("gila_wave_padding_occupancy_vertices")
+    occ_e = obs_metrics.REGISTRY.get("gila_wave_padding_occupancy_edges")
+    occ_l = obs_metrics.REGISTRY.get("gila_wave_lane_occupancy")
+    b = f"n{n_pad}_e{m_pad}"
+    assert occ_v.value(bucket=b) == (10 + 20) / (lanes * n_pad)
+    assert occ_e.value(bucket=b) == (2 * 9 + 2 * 19) / (lanes * m_pad)
+    assert occ_l.value(bucket=b) == 2 / lanes
+
+    bucketing.refine_level_many([r3], ideal_len=1.0, rep_const=1.0)
+    b3 = f"n{r3.g.n_pad}_e{r3.g.m_pad}"
+    assert r3.g.n_pad == 128
+    assert occ_v.value(bucket=b3) == 100 / (8 * r3.g.n_pad)
+    assert occ_l.value(bucket=b3) == 1 / 8
+
+
+# -- sim trace replay determinism ----------------------------------------------
+
+def _scripted_events():
+    out = []
+    for i in range(5):
+        e, n = G.gnp(24 + 4 * i, 2.0, 50 + i)
+        out.append(SimEvent(t=0.02 * i, edges=e, n=n, seed=i,
+                            priority=i % 2))
+    # one doomed request: deadline already passed at delivery
+    e, n = G.gnp(30, 2.0, 99)
+    out.append(SimEvent(t=0.01, edges=e, n=n, seed=9, deadline_s=0.0))
+    return out
+
+
+def _run_traced_sim():
+    vc = VirtualClock()
+    tr = obs_trace.Tracer(clock=vc, enabled=True)
+    core = EngineCore(LayoutConfig(seed=0), clock=vc, max_lanes=4,
+                      wave_lanes=2, dispatch=null_dispatch, tracer=tr)
+    run_sim(core, _scripted_events())
+    return core, tr
+
+
+def test_sim_trace_replays_byte_identical():
+    core1, tr1 = _run_traced_sim()
+    core2, tr2 = _run_traced_sim()
+    assert core1.log == core2.log
+    b1, b2 = tr1.json_bytes(), tr2.json_bytes()
+    assert len(tr1) > 10
+    assert b1 == b2, "sim trace is not replay-deterministic"
+    names = {e["name"] for e in json.loads(b1)["traceEvents"]}
+    # the scheduling log, wave spans, per-lane refine spans, and request
+    # lifetimes all ride one timeline
+    for expected in ("engine.submit", "engine.admit", "engine.complete",
+                     "engine.expire", "wave", "refine.group", "refine",
+                     "request", "engine.queue_depth"):
+        assert expected in names, (expected, names)
+
+
+def test_engine_stats_snapshot_against_scripted_trace():
+    """EngineCore.stats(): counters, queue-depth high-water mark, and the
+    atomically-taken metrics snapshot agree with the scripted run."""
+    fam = obs_metrics.REGISTRY.get("gila_engine_requests_total")
+    before = {k: v for k, v in fam.values().items()}
+    core, _ = _run_traced_sim()
+    s = core.stats()
+    assert s["completed"] == 5 and s["expired"] == 1
+    assert s["queued"] == 0 and s["running"] == 0
+    assert s["queue_depth_hwm"] >= 1
+    assert s["straggler_waves"] == 0        # VirtualClock waves take 0s
+    snap = s["metrics"]["gila_engine_requests_total"]["values"]
+    for event, want in (("submitted", 6), ("completed", 5), ("expired", 1)):
+        key = (("event", event),)
+        delta = snap[f'event="{event}"'] - before.get(key, 0.0)
+        assert delta == want, (event, delta)
+    # the snapshot is JSON-able end-to-end (it rides /stats and BENCH json)
+    json.dumps(s["metrics"])
+
+
+# -- HTTP: /metrics round trip -------------------------------------------------
+
+def test_prometheus_endpoint_round_trip():
+    from repro.launch.service import make_server
+    from repro.serve.engine import ContinuousLayoutService
+
+    svc = ContinuousLayoutService(LayoutConfig(seed=0), max_lanes=4)
+    httpd = make_server(svc)
+    host, port = httpd.server_address
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    try:
+        e, n = G.delaunay(80, 3)
+        pos, _ = svc.layout(e, n, timeout=600)
+        assert pos.shape == (n, 2)
+        with urllib.request.urlopen(f"http://{host}:{port}/metrics",
+                                    timeout=60) as resp:
+            assert resp.headers["Content-Type"].startswith("text/plain")
+            text = resp.read().decode()
+    finally:
+        httpd.shutdown()
+        svc.close()
+    # every sample line parses as <name>[{labels}] <float>
+    samples = {}
+    for line in text.strip().splitlines():
+        if line.startswith("#"):
+            continue
+        name_part, value = line.rsplit(" ", 1)
+        float(value)
+        samples[name_part] = float(value)
+    prefixed = [k for k in samples if k.startswith("gila_")]
+    assert prefixed, text[:400]
+    # the acceptance series: cache hit/miss and padding occupancy
+    assert samples["gila_compile_cache_misses_total"] >= 1
+    assert "gila_compile_cache_hits_total" in samples
+    occ = {k: v for k, v in samples.items()
+           if k.startswith("gila_wave_padding_occupancy_vertices")}
+    assert occ and all(0.0 < v <= 1.0 for v in occ.values()), occ
+    assert any(k.startswith("gila_engine_requests_total") for k in samples)
+    assert any(k.startswith("gila_request_latency_seconds_bucket")
+               for k in samples)

@@ -1,0 +1,21 @@
+"""R3 positives: observability hooks reaching INSIDE a jitted step.
+
+Feeding a metric or a span argument from a traced value forces a
+device→host sync (or a trace error) in the middle of the compiled step —
+instrumentation must ride the driver's EXISTING sync points
+(block_until_ready / io_boundary), never the step function itself.
+"""
+import jax
+import numpy as np
+
+from repro.obs import metrics, trace
+
+STEP_VALUE = metrics.REGISTRY.histogram("toy_step_value", "bad example")
+
+
+@jax.jit
+def step(x):
+    total = x.sum()
+    STEP_VALUE.observe(float(total))        # host sync to feed a metric
+    trace.instant("step.total", value=np.asarray(total))  # d2h for a span arg
+    return total

@@ -1,0 +1,25 @@
+"""R3 negative: the production instrumentation pattern (DESIGN.md §12).
+
+The span brackets the driver's existing dispatch + ``block_until_ready``
+pair, and metrics are fed from the already-synced host value — tracing
+adds zero host↔device transfers to the step.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.obs import metrics, trace
+
+STEP_VALUE = metrics.REGISTRY.histogram("toy_step_value", "good example")
+
+
+@jax.jit
+def step(x):
+    return jnp.sum(x * x)
+
+
+def driver(x):
+    with trace.span("step.dispatch", cat="device"):
+        out = step(x)
+        out.block_until_ready()             # the driver's existing sync
+    STEP_VALUE.observe(float(out))          # host-side, after the sync
+    return out
