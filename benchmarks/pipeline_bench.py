@@ -102,6 +102,40 @@ def _run_pass(graphs, *, bucketing_on: bool, seed: int = 0) -> dict:
     )
 
 
+def _coarsen_ab(graphs, passes: int = 5) -> dict:
+    """Steady-state coarsen A/B: the device-resident merger + on-device
+    compaction vs the host-bound reference drivers (``run_merger_host`` +
+    ``next_level_host`` — the pre-DESIGN.md-§13 behavior, kept in-tree as
+    the bit-parity reference). Both sides run the identical
+    ``build_hierarchy`` walk over prebuilt level-0 graphs, min-of-N to
+    strip scheduler noise; the device path goes first so the host side
+    inherits any shared warm-up, never the reverse."""
+    from repro.core import LayoutConfig, multilevel, solar_merger
+    from repro.graphs.graph import build_graph
+
+    cfg = LayoutConfig(seed=0, bucketing=True)
+    g0s = [build_graph(e, n, bucket=True) for _, e, n in graphs]
+
+    def one_pass():
+        t0 = time.perf_counter()
+        for g0 in g0s:
+            multilevel.build_hierarchy(g0, cfg)
+        return time.perf_counter() - t0
+
+    one_pass()                                      # warm compiles/caches
+    dev = min(one_pass() for _ in range(passes))
+    orig = multilevel.run_merger, multilevel.next_level
+    try:
+        multilevel.run_merger = solar_merger.run_merger_host
+        multilevel.next_level = solar_merger.next_level_host
+        one_pass()
+        host = min(one_pass() for _ in range(passes))
+    finally:
+        multilevel.run_merger, multilevel.next_level = orig
+    return dict(device_seconds=round(dev, 4), host_seconds=round(host, 4),
+                speedup=round(host / dev, 2), passes=passes)
+
+
 def run(kind: str = "small", skip_exact: bool = False,
         trace: str | None = None) -> dict:
     import jax
@@ -125,6 +159,13 @@ def run(kind: str = "small", skip_exact: bool = False,
     res["bucketed_warm"] = _run_pass(graphs_warm, bucketing_on=True, seed=1)
     print(f"[pipeline]   {res['bucketed_warm']['seconds']:.1f}s, "
           f"{res['bucketed_warm']['new_compiles']} compiled steps", flush=True)
+
+    print("[pipeline] coarsen A/B (device path vs host-bound drivers)...",
+          flush=True)
+    res["coarsen_ab"] = _coarsen_ab(graphs_cold)
+    ab = res["coarsen_ab"]
+    print(f"[pipeline]   device {ab['device_seconds']:.3f}s vs host-bound "
+          f"{ab['host_seconds']:.3f}s → {ab['speedup']}x", flush=True)
 
     if trace:
         # tracing-overhead measurement: the IDENTICAL warm workload, span

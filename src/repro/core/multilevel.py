@@ -99,22 +99,51 @@ class HierarchyExport:
 
 
 def connected_components(edges: np.ndarray, n: int) -> np.ndarray:
-    """Union-find component labels (host)."""
-    parent = np.arange(n, dtype=np.int64)
+    """Component labels, label = minimum vertex id in the component.
 
-    def find(x):
-        root = x
-        while parent[root] != root:
-            root = parent[root]
-        while parent[x] != root:
-            parent[x], x = root, parent[x]
-        return root
+    Vectorized: ``scipy.sparse.csgraph`` when available (one C-level BFS
+    sweep), else numpy pointer-jumping (hook each vertex to its minimum
+    neighbor label, then ``label[label]`` doubling — O(m log n) array ops).
+    Either path replaces the per-edge Python union-find loop whose
+    interpreter time alone dominated ingest on million-edge graphs.
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if n <= 0:
+        return np.zeros((0,), dtype=np.int64)
+    if len(edges) == 0:
+        return np.arange(n, dtype=np.int64)
+    try:
+        from scipy.sparse import coo_matrix
+        from scipy.sparse.csgraph import connected_components as _cc
+    except ImportError:                  # pragma: no cover - scipy is baked in
+        return _components_pointer_jumping(edges, n)
+    a = coo_matrix((np.ones(len(edges), np.int8),
+                    (edges[:, 0], edges[:, 1])), shape=(n, n))
+    _, comp = _cc(a, directed=False)
+    # csgraph labels are arbitrary ints — remap to the contract (min vertex
+    # id per component) so callers can rely on stable, seed-free labels
+    first = np.full(int(comp.max()) + 1, n, dtype=np.int64)
+    np.minimum.at(first, comp, np.arange(n, dtype=np.int64))
+    return first[comp]
 
-    for u, v in np.asarray(edges, dtype=np.int64):
-        ru, rv = find(u), find(v)
-        if ru != rv:
-            parent[max(ru, rv)] = min(ru, rv)
-    return np.array([find(i) for i in range(n)], dtype=np.int64)
+
+def _components_pointer_jumping(edges: np.ndarray, n: int) -> np.ndarray:
+    """Scipy-free fallback: min-neighbor hooking + pointer doubling."""
+    label = np.arange(n, dtype=np.int64)
+    u, v = edges[:, 0], edges[:, 1]
+    while True:
+        lu, lv = label[u], label[v]
+        # hook: every endpoint's label drops to the min over its edges
+        np.minimum.at(label, u, lv)
+        np.minimum.at(label, v, lu)
+        # shortcut: pointer doubling until labels are roots
+        while True:
+            nxt = label[label]
+            if np.array_equal(nxt, label):
+                break
+            label = nxt
+        if np.array_equal(label[u], label[v]):
+            return label
 
 
 def build_hierarchy(g0: PaddedGraph, cfg: LayoutConfig

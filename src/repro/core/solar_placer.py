@@ -68,16 +68,18 @@ def solar_placer(g: PaddedGraph, info: LevelInfo, coarse_pos: np.ndarray,
     n_pad = g.n_pad
     # route coarse positions to suns through the inter-level edges, then to
     # every member via its system-sun pointer.
+    # jnp ops throughout: LevelInfo arrays are numpy on the host compaction
+    # path but device-resident on the bucketed path, and the device arrays
+    # must not round-trip through the host here
     with io_boundary():                 # staging: level info → device
         coarse_pos = jnp.asarray(coarse_pos, jnp.float32)
-        pc = jnp.asarray(np.where(info.parent_coarse < 0, 0,
-                                  info.parent_coarse))
+        pc = jnp.maximum(jnp.asarray(info.parent_coarse), 0)
         member_sun_pos = coarse_pos[pc]       # [n_pad, 2] — pos of v's sun
         sun_of = jnp.asarray(info.sun_of)
-        depth = jnp.asarray(np.maximum(info.depth, 0))
+        depth = jnp.maximum(jnp.asarray(info.depth), 0)
         key = jax.random.PRNGKey(seed)
         scatter = jnp.asarray(scatter_scale, jnp.float32)
-        is_sun = jnp.asarray(info.state == SUN) & g.vmask
+        is_sun = (jnp.asarray(info.state) == SUN) & g.vmask
     # normalize the static n/m fields so _place's jit cache keys on padded
     # shapes only (one compile per shape bucket, core/bucketing.py)
     pos = _place(dataclasses.replace(g, n=0, m=0), sun_of, depth,

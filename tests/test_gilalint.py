@@ -121,14 +121,15 @@ def test_audit_checks_on_toy_step():
     assert not _donates_arg0(jax.jit(lambda x, y: x + y), spec, spec)
 
 
-def test_full_audit_covers_three_families_and_passes():
-    """run_audit() traces the three production cached-step families and
-    finds nothing — the in-process equivalent of CI's audit half."""
+def test_full_audit_covers_all_families_and_passes():
+    """run_audit() traces every production cached-step family and finds
+    nothing — the in-process equivalent of CI's audit half."""
     from tools.gilalint.jaxpr_audit import run_audit
 
     report = run_audit()
     fams = report["families"]
-    assert set(fams) == {"refine_single", "refine_many", "dist_step"}
+    assert set(fams) == {"refine_single", "refine_many", "dist_step",
+                         "merger", "coarsen"}
     for name, fam in fams.items():
         assert fam["failures"] == [], (name, fam["failures"])
         assert fam["entry"], name

@@ -306,12 +306,122 @@ def _audit_dist() -> dict:
             "mesh": dict(mesh.shape), "failures": failures, **facts}
 
 
+def _audit_merger() -> dict:
+    """solar_merger.cached_merger — the device-resident coarsening loop
+    (election → growth → halting vote as one ``lax.while_loop``)."""
+    import jax
+
+    from repro.core import solar_merger
+    from repro.utils.transfer import io_boundary
+
+    failures: list = []
+    traced = []
+    # two true sizes, one 256-vertex bucket — the A4 pair
+    for n in (70, 90):
+        g = _path_graph(n)
+        st = solar_merger.init_state(g)
+        with io_boundary():
+            rng = jax.random.PRNGKey(0)
+        key, fn, _, args = solar_merger.cached_merger(
+            g, st, rng, p_sun=0.35, max_rounds=96, force_every=4)
+        traced.append((key, jax.make_jaxpr(fn)(*args), args))
+
+    (key_a, jx_a, args), (key_b, jx_b, _) = traced
+    facts = _check_program("merger", jx_a, failures)
+    if key_a != key_b:
+        failures.append({
+            "rule": "A4",
+            "message": f"merger: same-bucket graphs produced different "
+                       f"cache keys {key_a} vs {key_b}"})
+    if str(jx_a) != str(jx_b):
+        failures.append({
+            "rule": "A4",
+            "message": "merger: same-bucket graphs traced to structurally "
+                       "different jaxprs — the loop depends on payload, "
+                       "not just the shape bucket"})
+    with _donation_forced():
+        fn2 = solar_merger._build_merger()
+        if not _donates_arg0(fn2, *args):
+            failures.append({
+                "rule": "A3",
+                "message": "merger: MergerState (arg 0) is not donated by "
+                           "_build_merger's jit — the loop must update the "
+                           "assignment buffers in place"})
+    return {"entry": "core.solar_merger.cached_merger",
+            "cache_key": repr(key_a), "failures": failures, **facts}
+
+
+def _audit_coarsen() -> dict:
+    """solar_merger.cached_compact + cached_assemble — the two halves of
+    the on-device ``next_level`` compaction (input-bucket compaction, then
+    coarse-bucket assembly around the host's true-size read)."""
+    import jax
+
+    from repro.core import solar_merger
+
+    failures: list = []
+    traced = []
+    for n in (70, 90):
+        g = _path_graph(n)
+        st = solar_merger.init_state(g)
+        key, fn, _, args = solar_merger.cached_compact(g, st)
+        traced.append((key, jax.make_jaxpr(fn)(*args), args))
+
+    (key_a, jx_a, cargs), (key_b, jx_b, _) = traced
+    facts = _check_program("coarsen.compact", jx_a, failures)
+    if key_a != key_b:
+        failures.append({
+            "rule": "A4",
+            "message": f"coarsen: same-bucket graphs produced different "
+                       f"compact cache keys {key_a} vs {key_b}"})
+    if str(jx_a) != str(jx_b):
+        failures.append({
+            "rule": "A4",
+            "message": "coarsen: same-bucket graphs traced to structurally "
+                       "different compact jaxprs"})
+
+    # assemble: trace at one coarse bucket decision; its key is pure shape
+    # statics, so the A4 pair shares it by construction — audit A1/A2/A3
+    import jax.numpy as jnp
+    from repro.utils.transfer import io_boundary
+    (parent_coarse, sun_of, depth, state, spi, n_coarse, cmass,
+     ce_lo, ce_hi, ce_w, n_edges) = jax.eval_shape(
+        lambda *a: solar_merger._build_compact()(*a), *cargs)
+    with io_boundary():
+        a_args = (jnp.zeros(ce_lo.shape, jnp.int32),
+                  jnp.zeros(ce_hi.shape, jnp.int32),
+                  jnp.zeros(ce_w.shape, jnp.float32),
+                  jnp.asarray(0, jnp.int32),
+                  jnp.zeros(cmass.shape, jnp.float32),
+                  jnp.asarray(0, jnp.int32))
+    akey, afn, _, aargs = solar_merger.cached_assemble(
+        *a_args, n_pad_c=256, m_pad_c=256)
+    ajx = jax.make_jaxpr(afn)(*aargs)
+    _check_program("coarsen.assemble", ajx, failures)
+
+    with _donation_forced():
+        if not _donates_arg0(solar_merger._build_compact(), *cargs):
+            failures.append({
+                "rule": "A3",
+                "message": "coarsen: MergerState (arg 0) is not donated by "
+                           "_build_compact's jit"})
+        if not _donates_arg0(solar_merger._build_assemble(256, 256), *aargs):
+            failures.append({
+                "rule": "A3",
+                "message": "coarsen: edge buffer (arg 0) is not donated by "
+                           "_build_assemble's jit"})
+    return {"entry": "core.solar_merger.cached_compact + cached_assemble",
+            "cache_key": repr((key_a, akey)), "failures": failures, **facts}
+
+
 # every cached-step family in the repo; adding a CompileCache user without
 # registering it here is itself a finding (A0) raised by tests/test_gilalint
 FAMILIES = (
     ("refine_single", _audit_single),
     ("refine_many", _audit_many),
     ("dist_step", _audit_dist),
+    ("merger", _audit_merger),
+    ("coarsen", _audit_coarsen),
 )
 
 
