@@ -136,6 +136,59 @@ def _coarsen_ab(graphs, passes: int = 5) -> dict:
                 speedup=round(host / dev, 2), passes=passes)
 
 
+def _engine_compare(kind: str) -> dict:
+    """Both refinement engines (gila vs maxent-stress, core/engine.py) on a
+    stress-favorable mesh-like suite: per-graph wall clock + quality
+    (NELD / sampled stress / CRE), identical seeds and iteration schedules.
+    Warm-started (one throwaway layout per engine pays the compiles) so the
+    wall-clock comparison is steady-state."""
+    from repro.graphs import generators as G
+    from repro.graphs.graph import build_graph
+    from repro.graphs.metrics import quality_report
+    from repro.core import LayoutConfig, multigila_layout
+
+    if kind == "smoke":
+        graphs = [("grid_12_12", *G.grid(12, 12)),
+                  ("tri_8_8", *G.tri_mesh(8, 8))]
+    else:
+        graphs = [("grid_20_20", *G.grid(20, 20)),
+                  ("tri_14_14", *G.tri_mesh(14, 14)),
+                  ("delaunay_600", *G.delaunay(600, 3)),
+                  ("torus_14_10", *G.torus(14, 10))]
+
+    out = {"suite": [g[0] for g in graphs], "engines": {}}
+    for engine in ("gila", "stress"):
+        cfg = LayoutConfig(seed=0, engine=engine)
+        for _, e, n in graphs:                      # warm pass: pay every
+            multigila_layout(e, n, cfg)             # compile off the clock
+        rows = []
+        for name, e, n in graphs:
+            t0 = time.perf_counter()
+            pos, _ = multigila_layout(e, n, cfg)
+            dt = time.perf_counter() - t0
+            g = build_graph(e, n)
+            p = np.zeros((g.n_pad, 2), np.float32)
+            p[:n] = pos
+            rep = quality_report(g, p)
+            rows.append(dict(name=name, seconds=round(dt, 4),
+                             neld=round(rep["neld"], 4),
+                             stress=round(rep["stress"], 5),
+                             cre=round(rep["cre"], 4)))
+        out["engines"][engine] = dict(
+            per_graph=rows,
+            mean_seconds=round(float(np.mean([r["seconds"] for r in rows])), 4),
+            mean_neld=round(float(np.mean([r["neld"] for r in rows])), 4),
+            mean_stress=round(float(np.mean([r["stress"] for r in rows])), 5))
+    ge = out["engines"]["gila"]
+    se = out["engines"]["stress"]
+    out["stress_wins_neld"] = bool(se["mean_neld"] < ge["mean_neld"])
+    out["stress_wins_stress_metric"] = bool(
+        se["mean_stress"] < ge["mean_stress"])
+    out["wallclock_ratio_stress_vs_gila"] = round(
+        se["mean_seconds"] / max(ge["mean_seconds"], 1e-9), 2)
+    return out
+
+
 def run(kind: str = "small", skip_exact: bool = False,
         trace: str | None = None) -> dict:
     import jax
@@ -166,6 +219,14 @@ def run(kind: str = "small", skip_exact: bool = False,
     ab = res["coarsen_ab"]
     print(f"[pipeline]   device {ab['device_seconds']:.3f}s vs host-bound "
           f"{ab['host_seconds']:.3f}s → {ab['speedup']}x", flush=True)
+
+    print("[pipeline] engine compare (gila vs stress, mesh suite)...",
+          flush=True)
+    res["engine_compare"] = _engine_compare(kind)
+    ec = res["engine_compare"]
+    print(f"[pipeline]   neld {ec['engines']['gila']['mean_neld']} (gila) vs "
+          f"{ec['engines']['stress']['mean_neld']} (stress), wall-clock "
+          f"ratio {ec['wallclock_ratio_stress_vs_gila']}x", flush=True)
 
     if trace:
         # tracing-overhead measurement: the IDENTICAL warm workload, span

@@ -17,8 +17,12 @@ The fix has three parts (DESIGN.md §8):
      O(log n_max) distinct shapes. Randomness is per-vertex
      (``utils/prng.py``), so re-padding is behavior-preserving.
   2. *Process-wide compile cache* — the per-level refinement runs through
-     one cached jitted step per key ``(bucket_n, bucket_e, cap, mode,
-     grid_dim, cell_cap)`` (plus the mesh for the dist engine). The static
+     one cached jitted step per key ``(engine, bucket_n, bucket_e, cap,
+     mode, grid_dim, cell_cap)`` (plus the mesh for the dist driver). The
+     engine id selects WHICH step program the builder constructs
+     (core/engine.py — GiLA forces vs maxent-stress share the key space
+     but never an entry), so a warm stress pass compiles zero new GiLA
+     variants and vice versa. The static
      ``n``/``m`` fields are normalized away before tracing
      (``shape_normalized``), iteration count / temperature / cooling are
      traced scalars, and the schedule picks grid_dim/cell_cap from the
@@ -45,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.graphs.graph import PaddedGraph, bucket_pad
 from repro.graphs import packing
+from repro.core import engine as engines
 from repro.core import gila
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
@@ -217,29 +222,24 @@ obs_metrics.REGISTRY.gauge(
     fn=jit_cache_entries)
 
 
+# per-engine dispatch accounting: which refinement engine served how many
+# cached-step dispatches, split by the single-graph vs batched path
+REFINE_DISPATCHES = obs_metrics.REGISTRY.counter(
+    "gila_refine_dispatches_total",
+    "Cached refine-step dispatches, labeled by engine and dispatch path")
+
+
 # -- the bucketed refinement step ----------------------------------------------
 
-def _build_refine(mode: str, grid_dim: int, cell_cap: int):
-    """Jitted per-level refinement with TRACED iteration count and cooling
-    schedule: one compile covers every level (and every graph) whose arrays
-    land in the same shape bucket. The position buffer is donated."""
-
-    def refine(pos0, src, dst, vmask, emask, mass, ewt, nbr_idx, nbr_mask,
-               iters, temp0, temp_decay, params):
-        g = PaddedGraph(src=src, dst=dst, vmask=vmask, emask=emask,
-                        mass=mass, ewt=ewt, n=0, m=0)
-
-        def body(i, carry):
-            pos, temp = carry
-            pos = gila.layout_iteration(g, pos, nbr_idx, nbr_mask, params,
-                                        temp, mode=mode, grid_dim=grid_dim,
-                                        cell_cap=cell_cap)
-            return pos, temp * temp_decay
-
-        pos, _ = jax.lax.fori_loop(0, iters, body, (pos0, temp0))
-        return pos
-
-    return jax.jit(refine, donate_argnums=donate_argnums_if_supported(0))
+def _build_refine(mode: str, grid_dim: int, cell_cap: int,
+                  engine: str = "gila"):
+    """Build the jitted per-level refinement step for ``engine`` — a thin
+    dispatch into the engine registry (core/engine.py), kept here so the
+    gilalint jaxpr audit and tests keep one stable entry point. The step
+    has TRACED iteration count and annealing vector: one compile covers
+    every level (and every graph) whose arrays land in the same shape
+    bucket. The position buffer is donated."""
+    return engines.get_engine(engine).build_refine(mode, grid_dim, cell_cap)
 
 
 def cached_refine(g: PaddedGraph, pos0, sched, nbr_idx, nbr_mask, *,
@@ -250,18 +250,21 @@ def cached_refine(g: PaddedGraph, pos0, sched, nbr_idx, nbr_mask, *,
     arguments staged — shared by the driver (``refine_level``) and the
     jaxpr audit of tools/gilalint, so the audit traces exactly the program
     the driver would run (gilalint R2 statically checks this call site).
+    ``sched.engine`` picks the step program AND is part of the key: GiLA
+    and stress entries of the same shape bucket never collide.
     """
-    key = ("refine", g.n_pad, g.m_pad, int(nbr_idx.shape[1]), sched.mode,
-           sched.grid_dim, sched.cell_cap, kernel_backend())
+    eng = engines.get_engine(sched.engine)
+    key = ("refine", sched.engine, g.n_pad, g.m_pad, int(nbr_idx.shape[1]),
+           sched.mode, sched.grid_dim, sched.cell_cap, kernel_backend())
     fn, fresh = STEP_CACHE.get(
-        key, lambda: _build_refine(sched.mode, sched.grid_dim, sched.cell_cap))
+        key, lambda: eng.build_refine(sched.mode, sched.grid_dim,
+                                      sched.cell_cap))
     with io_boundary():                     # intentional host→device staging
         params = jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32)
         args = (jnp.asarray(pos0), g.src, g.dst, g.vmask, g.emask, g.mass,
                 g.ewt, nbr_idx, nbr_mask,
                 jnp.asarray(sched.iters, jnp.int32),
-                jnp.asarray(sched.temp0, jnp.float32),
-                jnp.asarray(sched.temp_decay, jnp.float32), params)
+                jnp.asarray(eng.lane_schedule(sched), jnp.float32), params)
     return key, fn, fresh, args
 
 
@@ -273,14 +276,12 @@ def refine_level(g: PaddedGraph, pos0, sched, *, ideal_len: float,
     runs it with iters/temp as traced scalars. The first call into a cold
     entry is accounted to the ``compile`` phase, warm calls to ``refine``.
     """
+    eng = engines.get_engine(sched.engine)
     if sched.mode == "neighbor":
         with PHASES.phase("refine"):        # host-side k-hop list build
-            nbr_idx, nbr_mask = gila.build_level_neighbors(
-                g, sched.k, sched.cap, seed=seed)
+            nbr_idx, nbr_mask = eng.init_state(g, sched, seed)
     else:
-        with io_boundary():
-            nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
-            nbr_mask = jnp.zeros((g.n_pad, 1), bool)
+        nbr_idx, nbr_mask = eng.init_state(g, sched, seed)
 
     key, fn, fresh, args = cached_refine(g, pos0, sched, nbr_idx, nbr_mask,
                                          ideal_len=ideal_len,
@@ -291,10 +292,11 @@ def refine_level(g: PaddedGraph, pos0, sched, *, ideal_len: float,
     # NO new host↔device sync is introduced by tracing (gilalint-checked)
     t0 = time.perf_counter()
     with obs_trace.span("refine.dispatch", cat="device", key=key,
-                        fresh=fresh, mode=sched.mode):
+                        fresh=fresh, mode=sched.mode, engine=sched.engine):
         pos = fn(*args)
         pos.block_until_ready()
     PHASES.add("compile" if fresh else "refine", time.perf_counter() - t0)
+    REFINE_DISPATCHES.inc(engine=sched.engine, path="single")
     return pos
 
 
@@ -373,8 +375,8 @@ def group_key(req: RefineRequest) -> tuple:
     compiled batched program (and one device dispatch per wave)."""
     s = req.sched
     cap = s.cap if s.mode == "neighbor" else 1
-    return (req.g.n_pad, req.g.m_pad, cap, req.inc_k, s.mode, s.grid_dim,
-            s.cell_cap)
+    return (s.engine, req.g.n_pad, req.g.m_pad, cap, req.inc_k, s.mode,
+            s.grid_dim, s.cell_cap)
 
 
 # padding occupancy — the direct measurement of fragmentation loss: the
@@ -405,120 +407,15 @@ def _record_occupancy(reqs: list["RefineRequest"], lanes: int) -> None:
     OCC_LANES.set(len(reqs) / lanes, bucket=bucket)
 
 
-def _build_refine_many(mode: str, grid_dim: int, cell_cap: int, inc_k: int):
-    """Jitted batched refinement over ``[B, n_pad]`` lanes.
-
-    Per-lane arithmetic is element-for-element the computation of
-    ``_build_refine`` (gila.layout_iteration), so every lane is
-    bit-identical to the same level refined alone; the per-lane traced
-    iteration budget is masked against the group's shared trip count.
-
-    The *lowering* differs from a naive ``vmap`` in one deliberate way:
-    aggregation/gather with per-lane indices lowers to batched
-    scatter/gather HLO that XLA CPU executes an order of magnitude slower
-    than the flat single-graph form. So the lanes are flattened into ONE
-    index space — lane b's slot v lives at ``b * (n_pad + 1) + v``, a
-    per-lane zero sentinel row coming along at slot n_pad — and the
-    attraction aggregation runs, for ``inc_k > 0``, as ``inc_k`` unrolled
-    gathered adds over the incidence table (``packing.incidence_table``):
-    each vertex accumulates its incoming edge vectors in ascending slot
-    order, which is byte-for-byte the accumulation order of the sequential
-    step's ``segment_sum`` scatter — so the float sums stay bit-identical
-    while costing ~15× less than a batched scatter. Hub-heavy lanes
-    (``inc_k == 0``) fall back to one flat ``segment_sum`` over the fused
-    index space. Dense per-lane math (exact/grid repulsion, cooling clamp)
-    vmaps efficiently and stays vmapped — in grid mode that includes
-    ``bin_vertices``, so spatial binning stays per-graph.
-    """
-    from repro.kernels.nbody import ops as nbody_ops
-
-    def refine_many(pos0, src, dst, vmask, emask, mass, ewt, nbr_idx,
-                    nbr_mask, inc, iters, temp0, temp_decay, params,
-                    max_iters):
-        B, n_pad = pos0.shape[0], pos0.shape[1]
-        m_pad = src.shape[1]
-        C, L, md = params[0], params[1], params[2]
-        w = jnp.where(vmask, mass, 0.0).astype(jnp.float32)   # [B, n_pad]
-        offs = (jnp.arange(B, dtype=jnp.int32) * (n_pad + 1))[:, None]
-        flat_dst = (dst + offs).reshape(-1)
-        flat_src = src + offs
-        flat_dst_clip = jnp.clip(dst, 0, n_pad - 1) + offs
-        ell = jnp.maximum(ewt, 1e-6) * L                      # [B, m_pad]
-        # incidence slots in the fused per-lane edge index space
-        flat_inc = inc + (jnp.arange(B, dtype=jnp.int32)
-                          * (m_pad + 1))[:, None, None]
-
-        def flat_pos(pos):
-            """[B, n_pad, 2] → [B*(n_pad+1), 2] with a zero sentinel row
-            per lane (the dense-array 'empty inbox')."""
-            posp = jnp.concatenate(
-                [pos, jnp.zeros((B, 1, 2), pos.dtype)], axis=1)
-            return posp.reshape(B * (n_pad + 1), 2)
-
-        def attraction(pos):
-            flat = flat_pos(pos)
-            pos_src = flat[flat_src]                          # [B, m_pad, 2]
-            pos_dst = flat[flat_dst_clip]
-            delta = pos_src - pos_dst
-            dist = jnp.sqrt(jnp.sum(delta * delta, axis=2) + md ** 2)
-            f = (dist * dist) / ell
-            vec = delta / dist[..., None] * f[..., None]
-            vec = jnp.where(emask[..., None], vec, 0.0)
-            if inc_k > 0:
-                vflat = jnp.concatenate(
-                    [vec, jnp.zeros((B, 1, 2), vec.dtype)],
-                    axis=1).reshape(B * (m_pad + 1), 2)
-                acc = jnp.zeros((B, n_pad, 2), vec.dtype)
-                for k in range(inc_k):        # left-assoc: scatter order
-                    acc = acc + vflat[flat_inc[:, :, k]]
-                return acc
-            out = jax.ops.segment_sum(vec.reshape(-1, 2), flat_dst,
-                                      num_segments=B * (n_pad + 1))
-            return out.reshape(B, n_pad + 1, 2)[:, :n_pad]
-
-        if mode == "exact":
-            def repulsion(pos):
-                return jax.vmap(nbody_ops.nbody_repulsion,
-                                in_axes=(0, 0, 0, None, None, None))(
-                    pos, mass, vmask, C, L, md)
-        elif mode == "neighbor":
-            flat_nbr = nbr_idx + offs[:, :, None]             # [B, n_pad, K]
-
-            def repulsion(pos):
-                flat = flat_pos(pos)
-                wp = jnp.concatenate(
-                    [w, jnp.zeros((B, 1), w.dtype)], axis=1).reshape(-1)
-                npos = flat[flat_nbr]                         # [B, n_pad, K, 2]
-                nw = jnp.where(nbr_mask, wp[flat_nbr], 0.0)
-                delta = pos[:, :, None, :] - npos
-                d2 = jnp.sum(delta * delta, axis=-1) + md ** 2
-                inv = (C * L * L) * nw / d2
-                f = jnp.sum(delta * inv[..., None], axis=2)
-                return jnp.where(vmask[..., None], f, 0.0)
-        else:
-            from repro.kernels.grid_force import ops as grid_ops
-
-            def repulsion(pos):
-                return jax.vmap(lambda p, m_, v_: grid_ops.grid_repulsion(
-                    p, m_, v_, C, L, md,
-                    grid_dim=grid_dim, cell_cap=cell_cap))(pos, mass, vmask)
-
-        def body(i, carry):
-            pos, temp = carry
-            f = repulsion(pos) + attraction(pos)
-            norm = jnp.sqrt(jnp.sum(f * f, axis=2) + 1e-12)
-            step = jnp.minimum(norm, temp[:, None])
-            new = pos + f / norm[..., None] * step[..., None]
-            new = jnp.where(vmask[..., None], new, 0.0)
-            live = i < iters
-            return (jnp.where(live[:, None, None], new, pos),
-                    jnp.where(live, temp * temp_decay, temp))
-
-        pos, _ = jax.lax.fori_loop(0, max_iters, body, (pos0, temp0))
-        return pos
-
-    return jax.jit(refine_many,
-                   donate_argnums=donate_argnums_if_supported(0))
+def _build_refine_many(mode: str, grid_dim: int, cell_cap: int, inc_k: int,
+                       engine: str = "gila"):
+    """Build the jitted batched refinement over ``[B, n_pad]`` lanes for
+    ``engine`` — a thin dispatch into the engine registry (core/engine.py;
+    the flat-index lowering rationale is documented on
+    ``GilaEngine.build_refine_many``), kept here so the gilalint jaxpr
+    audit and tests keep one stable entry point."""
+    return engines.get_engine(engine).build_refine_many(
+        mode, grid_dim, cell_cap, inc_k)
 
 
 def cached_refine_many(reqs: list[RefineRequest], nbrs: list[tuple], *,
@@ -534,6 +431,7 @@ def cached_refine_many(reqs: list[RefineRequest], nbrs: list[tuple], *,
     key0 = group_key(reqs[0])
     assert all(group_key(r) == key0 for r in reqs), "mixed group"
     sched0 = reqs[0].sched
+    eng = engines.get_engine(sched0.engine)
     b = len(reqs)
     lanes = packing.lane_bucket(b, lanes_min)
     packed = packing.pack_graphs([r.g for r in reqs], lanes=lanes)
@@ -547,20 +445,21 @@ def cached_refine_many(reqs: list[RefineRequest], nbrs: list[tuple], *,
         # dead lanes: iteration budget 0 — they ride through untouched
         iters = jnp.asarray([r.sched.iters for r in reqs] + [0] * (lanes - b),
                             jnp.int32)
-        temp0 = pl(jnp.asarray([r.sched.temp0 for r in reqs], jnp.float32))
-        decay = pl(jnp.asarray([r.sched.temp_decay for r in reqs],
-                               jnp.float32))
+        # the per-lane annealing vector [lanes, sched_k] (engine-specific:
+        # gila (temp0, decay); stress adds (alpha0, alpha_decay))
+        sparams = pl(jnp.asarray([eng.lane_schedule(r.sched) for r in reqs],
+                                 jnp.float32))
         params = jnp.asarray([rep_const, ideal_len, min_dist], jnp.float32)
         max_iters = jnp.asarray(max(r.sched.iters for r in reqs), jnp.int32)
 
     cache_key = ("refine_many", lanes, kernel_backend()) + key0
     fn, fresh = STEP_CACHE.get(
         cache_key,
-        lambda: _build_refine_many(sched0.mode, sched0.grid_dim,
-                                   sched0.cell_cap, reqs[0].inc_k))
+        lambda: eng.build_refine_many(sched0.mode, sched0.grid_dim,
+                                      sched0.cell_cap, reqs[0].inc_k))
     args = (pos0, packed.g.src, packed.g.dst, packed.g.vmask, packed.g.emask,
             packed.g.mass, packed.g.ewt, nbr_idx, nbr_mask, inc, iters,
-            temp0, decay, params, max_iters)
+            sparams, params, max_iters)
     return cache_key, fn, fresh, args
 
 
@@ -590,22 +489,16 @@ def refine_level_many(reqs: list[RefineRequest], *, ideal_len: float,
                 lanes_min=lanes_min, lanes_cap=lanes_cap))
         return out
     mode = reqs[0].sched.mode
+    eng = engines.get_engine(reqs[0].sched.engine)
 
-    # per-lane neighbor lists (host build, same code path + seed as the
-    # single-graph driver so the lists — and hence the forces — match)
+    # per-lane engine state (host neighbor-list build for neighbor mode,
+    # same code path + seed as the single-graph driver so the lists — and
+    # hence the forces — match)
     if mode == "neighbor":
-        from repro.graphs.graph import unique_edges
-        nbrs = []
         with PHASES.phase("refine"):
-            for r in reqs:
-                idx, msk = gila.khop_neighbors(unique_edges(r.g), r.g.n,
-                                               r.sched.k, r.sched.cap,
-                                               seed=r.seed)
-                nbrs.append(gila.pad_neighbors(idx, msk, r.g.n_pad))
+            nbrs = [eng.init_state(r.g, r.sched, r.seed) for r in reqs]
     else:
-        with io_boundary():
-            z = (jnp.zeros((reqs[0].g.n_pad, 1), jnp.int32),
-                 jnp.zeros((reqs[0].g.n_pad, 1), bool))
+        z = eng.init_state(reqs[0].g, reqs[0].sched, reqs[0].seed)
         nbrs = [z] * len(reqs)
 
     key, fn, fresh, args = cached_refine_many(
@@ -614,10 +507,12 @@ def refine_level_many(reqs: list[RefineRequest], *, ideal_len: float,
     # span brackets the existing dispatch + sync only (no added syncs)
     t0 = time.perf_counter()
     with obs_trace.span("refine_many.dispatch", cat="device", key=key,
-                        fresh=fresh, lanes=len(reqs)):
+                        fresh=fresh, lanes=len(reqs),
+                        engine=reqs[0].sched.engine):
         out = fn(*args)
         out.block_until_ready()
     PHASES.add("compile" if fresh else "refine", time.perf_counter() - t0)
+    REFINE_DISPATCHES.inc(engine=reqs[0].sched.engine, path="many")
     b = len(reqs)
     with io_boundary():                     # egress: unpack the live lanes
         return [out[i] for i in range(b)]

@@ -399,13 +399,21 @@ def sharded_grid_force(mesh: Mesh, n_pad: int, grid_dim: int, cell_cap: int,
 
 def layout_train_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
                       mode: str = "neighbor", grid_dim: int = 0,
-                      cell_cap: int = 0):
-    """One full distributed GiLA iteration: repulsion + attraction + update.
+                      cell_cap: int = 0, engine: str = "gila"):
+    """One full distributed refinement iteration for ``engine``.
 
     ``mode`` is "exact" | "neighbor" | "grid" (the same selection
     core/schedule.py makes by level size). Grid mode needs the static
     ``grid_dim``/``cell_cap`` from ``kernels.grid_force.choose_grid`` and
     ignores ``nbr_idx`` (pass cap = 1 dummies, see ``layout_step_specs``).
+
+    ``engine="gila"`` is the FR superstep (repulsion + attraction +
+    temp-clamped displacement). ``engine="stress"`` is the maxent-stress
+    Jacobi superstep (core/stress.py): the per-vertex numerator/denominator
+    segment-sums run over this shard's destination block (the same
+    Spinner-order edge partition the attraction uses), the entropy repulsion
+    reuses the mode branches with C scaled by the traced ``alpha``, and the
+    step takes one extra replicated scalar ``alpha`` after ``temp``.
 
     Returns (step_fn, input_shardings) suitable for
     jax.jit(step_fn, in_shardings=...).lower(*specs).
@@ -419,13 +427,8 @@ def layout_train_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
         from repro.kernels.grid_force.ops import backend_mode
         grid_backend = backend_mode()
 
-    def local(pos_blk, w_blk, nbr_idx, src, dst_local, emask, ewt, params, temp):
-        C, L, md = params[0], params[1], params[2]
-        pos_all = jax.lax.all_gather(pos_blk, VTX, tiled=True)
-        w_all = jax.lax.all_gather(w_blk, VTX, tiled=True)
-        pos_pad = jnp.concatenate([pos_all, jnp.zeros((1, 2), pos_all.dtype)], 0)
-        w_pad = jnp.concatenate([w_all, jnp.zeros((1,), w_all.dtype)], 0)
-
+    def repulsion(pos_blk, w_blk, nbr_idx, pos_all, w_all, pos_pad, w_pad,
+                  C, L, md):
         if mode == "exact":
             chunk = n_pad // msize
             mi = jax.lax.axis_index("model")
@@ -435,26 +438,35 @@ def layout_train_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
             dy = pos_blk[:, 1][:, None] - cpos[:, 1][None, :]
             d2 = dx * dx + dy * dy + md * md
             inv = (C * L * L) * cw[None, :] / d2
-            rep = jax.lax.psum(
+            return jax.lax.psum(
                 jnp.stack([jnp.sum(dx * inv, 1), jnp.sum(dy * inv, 1)], 1),
                 "model")
-        elif mode == "grid":
-            rep = _grid_rep_spmd(pos_blk, w_blk, C, L, md, mesh=mesh,
-                                 n_pad=n_pad, grid_dim=grid_dim,
-                                 cell_cap=cell_cap, variant="allgather",
-                                 backend=grid_backend,
-                                 pos_all=pos_all, w_all=w_all)
-        else:
-            # split the neighbor cap over the model axis → 2-D decomposition
-            ccap = cap // msize
-            mi = jax.lax.axis_index("model")
-            nidx = jax.lax.dynamic_slice_in_dim(nbr_idx, mi * ccap, ccap, axis=1)
-            npos = pos_pad[nidx]
-            nw = w_pad[nidx]
-            delta = pos_blk[:, None, :] - npos
-            d2 = jnp.sum(delta * delta, -1) + md * md
-            inv = (C * L * L) * nw / d2
-            rep = jax.lax.psum(jnp.sum(delta * inv[:, :, None], axis=1), "model")
+        if mode == "grid":
+            return _grid_rep_spmd(pos_blk, w_blk, C, L, md, mesh=mesh,
+                                  n_pad=n_pad, grid_dim=grid_dim,
+                                  cell_cap=cell_cap, variant="allgather",
+                                  backend=grid_backend,
+                                  pos_all=pos_all, w_all=w_all)
+        # split the neighbor cap over the model axis → 2-D decomposition
+        ccap = cap // msize
+        mi = jax.lax.axis_index("model")
+        nidx = jax.lax.dynamic_slice_in_dim(nbr_idx, mi * ccap, ccap, axis=1)
+        npos = pos_pad[nidx]
+        nw = w_pad[nidx]
+        delta = pos_blk[:, None, :] - npos
+        d2 = jnp.sum(delta * delta, -1) + md * md
+        inv = (C * L * L) * nw / d2
+        return jax.lax.psum(jnp.sum(delta * inv[:, :, None], axis=1), "model")
+
+    def local(pos_blk, w_blk, nbr_idx, src, dst_local, emask, ewt, params, temp):
+        C, L, md = params[0], params[1], params[2]
+        pos_all = jax.lax.all_gather(pos_blk, VTX, tiled=True)
+        w_all = jax.lax.all_gather(w_blk, VTX, tiled=True)
+        pos_pad = jnp.concatenate([pos_all, jnp.zeros((1, 2), pos_all.dtype)], 0)
+        w_pad = jnp.concatenate([w_all, jnp.zeros((1,), w_all.dtype)], 0)
+
+        rep = repulsion(pos_blk, w_blk, nbr_idx, pos_all, w_all, pos_pad,
+                        w_pad, C, L, md)
 
         ps = pos_pad[src]
         pd = pos_blk[jnp.clip(dst_local, 0, n_loc - 1)]
@@ -470,11 +482,50 @@ def layout_train_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
         step = jnp.minimum(norm, temp)
         return pos_blk + force / norm[:, None] * step[:, None]
 
-    step = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(VTX, None), P(VTX), P(VTX, None), P(VTX), P(VTX), P(VTX),
-                  P(VTX), P(), P()),
-        out_specs=P(VTX, None))
+    def local_stress(pos_blk, w_blk, nbr_idx, src, dst_local, emask, ewt,
+                     params, temp, alpha):
+        C, L, md = params[0], params[1], params[2]
+        pos_all = jax.lax.all_gather(pos_blk, VTX, tiled=True)
+        w_all = jax.lax.all_gather(w_blk, VTX, tiled=True)
+        pos_pad = jnp.concatenate([pos_all, jnp.zeros((1, 2), pos_all.dtype)], 0)
+        w_pad = jnp.concatenate([w_all, jnp.zeros((1,), w_all.dtype)], 0)
+
+        # entropy term: the FR repulsion field with C annealed by alpha
+        rep = repulsion(pos_blk, w_blk, nbr_idx, pos_all, w_all, pos_pad,
+                        w_pad, alpha * C, L, md)
+
+        # weighted-Jacobi stress term over this shard's destination block
+        ell = jnp.maximum(ewt, 1e-6) * L
+        we = jnp.where(emask, 1.0 / (ell * ell), 0.0)
+        ps = pos_pad[src]
+        pd = pos_blk[jnp.clip(dst_local, 0, n_loc - 1)]
+        delta = pd - ps
+        dist = jnp.sqrt(jnp.sum(delta * delta, 1) + md * md)
+        tgt = ps + delta / dist[:, None] * ell[:, None]
+        vec = jnp.where(emask[:, None], we[:, None] * tgt, 0.0)
+        seg = jnp.clip(dst_local, 0, n_loc)
+        num = jax.ops.segment_sum(vec, seg, num_segments=n_loc + 1)[:n_loc]
+        rho = jax.ops.segment_sum(we, seg, num_segments=n_loc + 1)[:n_loc]
+
+        new = (num + rep) / jnp.maximum(rho, 1e-12)[:, None]
+        new = jnp.where(rho[:, None] > 0, new, pos_blk)
+        d = new - pos_blk
+        norm = jnp.sqrt(jnp.sum(d * d, 1) + 1e-12)
+        step = jnp.minimum(norm, temp)
+        return pos_blk + d / norm[:, None] * step[:, None]
+
+    if engine == "stress":
+        step = shard_map(
+            local_stress, mesh=mesh,
+            in_specs=(P(VTX, None), P(VTX), P(VTX, None), P(VTX), P(VTX),
+                      P(VTX), P(VTX), P(), P(), P()),
+            out_specs=P(VTX, None))
+    else:
+        step = shard_map(
+            local, mesh=mesh,
+            in_specs=(P(VTX, None), P(VTX), P(VTX, None), P(VTX), P(VTX),
+                      P(VTX), P(VTX), P(), P()),
+            out_specs=P(VTX, None))
     shardings = dict(
         pos=NamedSharding(mesh, P(VTX, None)),
         w=NamedSharding(mesh, P(VTX)),
@@ -603,13 +654,14 @@ def layout_halo_specs(mesh: Mesh, n_pad: int, m_pad: int, cap: int,
 
 
 def layout_step_specs(n_pad: int, m_pad: int, cap: int,
-                      mode: str = "neighbor"):
+                      mode: str = "neighbor", engine: str = "gila"):
     """ShapeDtypeStructs for the dry-run (no allocation). In grid mode the
-    neighbor lists are unused; cap collapses to a 1-wide dummy."""
+    neighbor lists are unused; cap collapses to a 1-wide dummy. The stress
+    engine's step takes one extra replicated annealing scalar ``alpha``."""
     if mode == "grid":
         cap = 1
     f32, i32 = jnp.float32, jnp.int32
-    return dict(
+    specs = dict(
         pos=jax.ShapeDtypeStruct((n_pad, 2), f32),
         w=jax.ShapeDtypeStruct((n_pad,), f32),
         nbr_idx=jax.ShapeDtypeStruct((n_pad, cap), i32),
@@ -620,6 +672,9 @@ def layout_step_specs(n_pad: int, m_pad: int, cap: int,
         params=jax.ShapeDtypeStruct((3,), f32),
         temp=jax.ShapeDtypeStruct((), f32),
     )
+    if engine == "stress":
+        specs["alpha"] = jax.ShapeDtypeStruct((), f32)
+    return specs
 
 
 # -- host-side level driver (engine="multigila_dist" in core/multilevel.py) ----
@@ -671,7 +726,8 @@ def _mesh_cache_key(mesh: Mesh) -> tuple:
 
 
 def cached_layout_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int, *,
-                       mode: str, grid_dim: int = 0, cell_cap: int = 0):
+                       mode: str, grid_dim: int = 0, cell_cap: int = 0,
+                       engine: str = "gila"):
     """Process-wide cached (jitted step, shardings) for one shape bucket.
 
     ``layout_train_step`` returns a FRESH shard_map + jit wrapper per call,
@@ -684,12 +740,13 @@ def cached_layout_step(mesh: Mesh, n_pad: int, m_pad: int, cap: int, *,
     """
     from repro.core import bucketing
 
-    key = ("dist_step", _mesh_cache_key(mesh), n_pad, m_pad, cap, mode,
-           grid_dim, cell_cap, bucketing.kernel_backend())
+    key = ("dist_step", engine, _mesh_cache_key(mesh), n_pad, m_pad, cap,
+           mode, grid_dim, cell_cap, bucketing.kernel_backend())
 
     def build():
         step, sh = layout_train_step(mesh, n_pad, m_pad, cap, mode=mode,
-                                     grid_dim=grid_dim, cell_cap=cell_cap)
+                                     grid_dim=grid_dim, cell_cap=cell_cap,
+                                     engine=engine)
         jitted = jax.jit(
             step, donate_argnums=bucketing.donate_argnums_if_supported(0))
         return jitted, sh
@@ -746,11 +803,19 @@ def run_layout_level(mesh: Mesh, g, pos0, sched, *, ideal_len: float,
         cap = 1
         nbr = np.full((n_pad, 1), n_pad, np.int32)
 
+    engine = getattr(sched, "engine", "gila")
     jitted, sh, fresh = cached_layout_step(mesh, n_pad, m_pad, cap,
                                            mode=sched.mode,
                                            grid_dim=sched.grid_dim,
-                                           cell_cap=sched.cell_cap)
+                                           cell_cap=sched.cell_cap,
+                                           engine=engine)
     from repro.utils.transfer import io_boundary
+
+    if engine == "stress":
+        from repro.core.stress import alpha_schedule
+        alpha, alpha_decay = alpha_schedule(sched.iters)
+    else:
+        alpha, alpha_decay = None, 1.0
 
     dput = jax.device_put
     with io_boundary():                     # ingest: host partition → mesh
@@ -767,15 +832,23 @@ def run_layout_level(mesh: Mesh, g, pos0, sched, *, ideal_len: float,
     temp = sched.temp0
     t0 = time.perf_counter()
     for it in range(sched.iters):
-        with io_boundary():                 # staging: cooling scalar
+        with io_boundary():                 # staging: annealing scalars
             temp_d = dput(jnp.asarray(temp, jnp.float32), sh["scalar"])
-        pos_d = jitted(pos_d, w_d, nbr_d, src_d, dst_d, em_d, ew_d, params,
-                       temp_d)
+            if alpha is not None:
+                al_d = dput(jnp.asarray(alpha, jnp.float32), sh["scalar"])
+        if alpha is not None:
+            pos_d = jitted(pos_d, w_d, nbr_d, src_d, dst_d, em_d, ew_d,
+                           params, temp_d, al_d)
+        else:
+            pos_d = jitted(pos_d, w_d, nbr_d, src_d, dst_d, em_d, ew_d,
+                           params, temp_d)
         if it == 0 and fresh:               # first call traces + compiles
             pos_d.block_until_ready()
             PHASES.add("compile", time.perf_counter() - t0)
             t0 = time.perf_counter()
         temp *= sched.temp_decay
+        if alpha is not None:
+            alpha *= alpha_decay
     pos_d.block_until_ready()
     PHASES.add("refine", time.perf_counter() - t0)
     with io_boundary():                     # egress: gather to host

@@ -4,7 +4,7 @@ pruning â†’ (partitioning) â†’ coarsening* â†’ coarsest layout â†’ [placement â†
 single-level refinement]* â†’ reinsertion, applied per connected component,
 components packed on a shelf grid at the end.
 
-The same driver powers four engines:
+The same pipeline powers four DRIVERS (``LayoutConfig.driver``):
   * ``multigila``   â€” the paper's algorithm (distributed-semantics supersteps);
   * ``multigila_dist`` â€” identical algorithm, but every level's refinement
                       runs through the *actually sharded* superstep
@@ -14,6 +14,12 @@ The same driver powers four engines:
   * ``centralized`` â€” FMÂ³ stand-in baseline: identical hierarchy, exact
                       all-pairs forces and full iteration budget everywhere;
   * ``flat``        â€” single-level GiLA baseline (the paper's predecessor [5]).
+
+Orthogonally, ``LayoutConfig.engine`` selects the per-level refinement
+ENGINE (core/engine.py): ``"gila"`` â€” Fruchtermanâ€“Reingold forces â€” or
+``"stress"`` â€” multilevel maxent-stress local iterations (core/stress.py).
+Every driver threads the engine id through its schedules, so hierarchy,
+placement, bucketing and wave grouping are engine-agnostic.
 """
 from __future__ import annotations
 
@@ -50,7 +56,8 @@ class LayoutConfig:
     ideal_len: float = 1.0
     rep_const: float = 1.0
     seed: int = 0
-    engine: str = "multigila"   # multigila | multigila_dist | centralized | flat
+    driver: str = "multigila"   # multigila | multigila_dist | centralized | flat
+    engine: str = "gila"        # per-level refinement engine: gila | stress
     # multigila_dist (data, model) mesh; None â†’ one mesh over all local devices
     mesh_shape: tuple | None = None
     prune: bool = True
@@ -58,6 +65,16 @@ class LayoutConfig:
     # False = the exact-shape legacy path (retraces per level), kept for
     # the parity test and as the pre-refactor benchmark baseline
     bucketing: bool = True
+
+    def __post_init__(self):
+        # back-compat shim: ``engine=`` used to name the DRIVER. Constructor
+        # calls passing a driver name there keep working; the per-level
+        # force model then stays the default. (frozen dataclass â€” rebind
+        # via object.__setattr__; dataclasses.replace re-runs this no-op.)
+        if self.engine in ("multigila", "multigila_dist", "centralized",
+                           "flat"):
+            object.__setattr__(self, "driver", self.engine)
+            object.__setattr__(self, "engine", "gila")
 
 
 @dataclasses.dataclass
@@ -174,7 +191,7 @@ def build_hierarchy(g0: PaddedGraph, cfg: LayoutConfig
 
 def _layout_one_level(g: PaddedGraph, pos0, sched: LevelSchedule,
                       cfg: LayoutConfig, seed: int):
-    if cfg.engine == "multigila_dist":
+    if cfg.driver == "multigila_dist":
         from repro.core.distributed import run_layout_level
         from repro.launch.mesh import make_compat_mesh, make_host_mesh
         mesh = (make_compat_mesh(tuple(cfg.mesh_shape), ("data", "model"))
@@ -189,24 +206,30 @@ def _layout_one_level(g: PaddedGraph, pos0, sched: LevelSchedule,
         return bucketing.refine_level(g, pos0, sched,
                                       ideal_len=cfg.ideal_len,
                                       rep_const=cfg.rep_const, seed=seed)
-    if sched.mode == "neighbor":
-        nbr_idx, nbr_mask = gila.build_level_neighbors(g, sched.k, sched.cap,
-                                                       seed=seed)
-    else:
-        # exact and grid modes need no neighbor lists (grid rebins inside
-        # the iteration loop)
-        with io_boundary():
-            nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
-            nbr_mask = jnp.zeros((g.n_pad, 1), bool)
+    # exact/grid modes need no neighbor lists (grid rebins inside the
+    # iteration loop); the engine's init_state builds k-hop lists otherwise
+    from repro.core.engine import get_engine
+    nbr_idx, nbr_mask = get_engine(sched.engine).init_state(g, sched, seed)
     # exact-shape path: compile time is inseparable here, and the jit call
     # stages its python-scalar schedule knobs h2d at dispatch (the bucketed
     # path stages them explicitly in cached_refine instead)
     with PHASES.phase("refine"), io_boundary():
-        pos = gila.gila_layout(
-            g, pos0, nbr_idx, nbr_mask, mode=sched.mode, iters=sched.iters,
-            temp0=sched.temp0, temp_decay=sched.temp_decay,
-            ideal_len=cfg.ideal_len, rep_const=cfg.rep_const,
-            grid_dim=sched.grid_dim, cell_cap=sched.cell_cap)
+        if sched.engine == "stress":
+            from repro.core import stress
+            a0, ad = stress.alpha_schedule(sched.iters)
+            pos = stress.stress_layout(
+                g, pos0, nbr_idx, nbr_mask, mode=sched.mode,
+                iters=sched.iters, temp0=sched.temp0,
+                temp_decay=sched.temp_decay, alpha0=a0, alpha_decay=ad,
+                ideal_len=cfg.ideal_len, rep_const=cfg.rep_const,
+                grid_dim=sched.grid_dim, cell_cap=sched.cell_cap)
+        else:
+            pos = gila.gila_layout(
+                g, pos0, nbr_idx, nbr_mask, mode=sched.mode,
+                iters=sched.iters, temp0=sched.temp0,
+                temp_decay=sched.temp_decay, ideal_len=cfg.ideal_len,
+                rep_const=cfg.rep_const, grid_dim=sched.grid_dim,
+                cell_cap=sched.cell_cap)
         pos.block_until_ready()             # keep device time in-phase
     return pos
 
@@ -254,9 +277,14 @@ def _build_export(edges, n, pr, graphs, infos, pos_full) -> HierarchyExport:
 
 
 def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
-                     *, export: bool = False):
+                     *, export: bool = False, weights=None):
     """Multi-GiLA on one connected component; returns positions [n,2] (and,
-    with ``export=True``, the HierarchyExport the serving layer consumes)."""
+    with ``export=True``, the HierarchyExport the serving layer consumes).
+
+    ``weights`` (float[m], optional) are per-edge weights: the attraction
+    term's ideal length â„“_e = w_eÂ·L, and the stress engine's target
+    distances. They thread prune â†’ build_graph â†’ hierarchy (the solar
+    merger compounds them into coarse ``ewt``)."""
     stats = LayoutStats()
 
     def ret(pos, stats, graphs=None, infos=None, pr=None):
@@ -268,27 +296,30 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
 
     if n == 1:
         return ret(np.zeros((1, 2), np.float32), stats)
-    if cfg.prune and cfg.engine != "flat":
-        pr = prune_degree_one(edges, n)
+    if cfg.prune and cfg.driver != "flat":
+        pr = prune_degree_one(edges, n, weights=weights)
     else:
         pr = None
 
     work_edges = pr.edges if pr is not None else edges
     work_n = pr.n if pr is not None else n
     mass = pr.mass if pr is not None else None
+    work_ewt = pr.ewt if pr is not None else weights
     if work_n == 0 or len(work_edges) == 0:
         # star graphs collapse entirely under pruning: lay out leaves only
         pos = reinsert(pr, np.zeros((max(work_n, 1), 2), np.float32), work_edges) \
             if pr is not None else np.zeros((n, 2), np.float32)
         return ret(pos, stats)
-    g0 = build_graph(work_edges, work_n, mass=mass, bucket=cfg.bucketing)
+    g0 = build_graph(work_edges, work_n, mass=mass, ewt=work_ewt,
+                     bucket=cfg.bucketing)
 
-    if cfg.engine == "flat":
+    if cfg.driver == "flat":
         sched = make_schedule(0, 1, g0.n, g0.m,
                               exact_threshold=cfg.exact_threshold,
                               grid_threshold=cfg.grid_threshold,
                               coarsest_iters=cfg.coarsest_iters,
-                              ideal_len=cfg.ideal_len, n_pad=g0.n_pad)
+                              ideal_len=cfg.ideal_len, n_pad=g0.n_pad,
+                              engine=cfg.engine)
         pos = gila.random_init(g0, cfg.ideal_len * max(g0.n, 4) ** 0.5,
                                cfg.seed)
         pos = _layout_one_level(g0, pos, sched, cfg, cfg.seed)
@@ -303,7 +334,7 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
     stats.levels = L
     stats.level_sizes = tuple((g.n, g.m) for g in graphs)
 
-    exact_thr = (10 ** 9) if cfg.engine == "centralized" else cfg.exact_threshold
+    exact_thr = (10 ** 9) if cfg.driver == "centralized" else cfg.exact_threshold
 
     # coarsest level: random init + layout
     gk = graphs[-1]
@@ -311,7 +342,8 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
                           grid_threshold=cfg.grid_threshold,
                           coarsest_iters=cfg.coarsest_iters,
                           finest_iters=cfg.finest_iters,
-                          ideal_len=cfg.ideal_len, n_pad=gk.n_pad)
+                          ideal_len=cfg.ideal_len, n_pad=gk.n_pad,
+                          engine=cfg.engine)
     pos = gila.random_init(gk, cfg.ideal_len * max(gk.n, 4) ** 0.5, cfg.seed)
     with obs_trace.span("refine.level", level=L - 1, n=gk.n):
         pos = _layout_one_level(gk, pos, sched, cfg, cfg.seed + L)
@@ -328,7 +360,8 @@ def layout_component(edges: np.ndarray, n: int, cfg: LayoutConfig,
                               grid_threshold=cfg.grid_threshold,
                               coarsest_iters=cfg.coarsest_iters,
                               finest_iters=cfg.finest_iters,
-                              ideal_len=cfg.ideal_len, n_pad=gi.n_pad)
+                              ideal_len=cfg.ideal_len, n_pad=gi.n_pad,
+                              engine=cfg.engine)
         with obs_trace.span("refine.level", level=i, n=gi.n):
             pos = _layout_one_level(gi, pos, sched, cfg, cfg.seed + i)
 
@@ -435,7 +468,7 @@ class _ComponentTask:
     """
 
     def __init__(self, edges: np.ndarray, n: int, cfg: LayoutConfig,
-                 lane: object = None):
+                 lane: object = None, weights=None):
         self.cfg = cfg
         self.stats = LayoutStats()
         self.n = n
@@ -446,10 +479,11 @@ class _ComponentTask:
             self.final = np.zeros((1, 2), np.float32)
             return
         if cfg.prune:
-            self.pr = prune_degree_one(edges, n)
+            self.pr = prune_degree_one(edges, n, weights=weights)
         self.work_edges = self.pr.edges if self.pr is not None else edges
         work_n = self.pr.n if self.pr is not None else n
         mass = self.pr.mass if self.pr is not None else None
+        work_ewt = self.pr.ewt if self.pr is not None else weights
         if work_n == 0 or len(self.work_edges) == 0:
             # star graphs collapse entirely under pruning (layout_component)
             self.final = (reinsert(self.pr,
@@ -458,7 +492,8 @@ class _ComponentTask:
                           if self.pr is not None
                           else np.zeros((n, 2), np.float32))
             return
-        self.g0 = build_graph(self.work_edges, work_n, mass=mass, bucket=True)
+        self.g0 = build_graph(self.work_edges, work_n, mass=mass,
+                              ewt=work_ewt, bucket=True)
         with PHASES.phase("coarsen"), obs_trace.span(
                 "coarsen", cat="host", lane=lane, n=self.g0.n, m=self.g0.m):
             self.graphs, self.infos = build_hierarchy(self.g0, cfg)
@@ -479,7 +514,8 @@ class _ComponentTask:
                              grid_threshold=cfg.grid_threshold,
                              coarsest_iters=cfg.coarsest_iters,
                              finest_iters=cfg.finest_iters,
-                             ideal_len=cfg.ideal_len, n_pad=gi.n_pad)
+                             ideal_len=cfg.ideal_len, n_pad=gi.n_pad,
+                             engine=cfg.engine)
 
     def next_request(self) -> bucketing.RefineRequest:
         """Placement (when walking down) + the level's refine request,
@@ -529,12 +565,14 @@ class GraphJob:
     """
 
     def __init__(self, edges: np.ndarray, n: int, cfg: LayoutConfig, *,
-                 uid: int = -1):
+                 uid: int = -1, weights=None):
         self.cfg = cfg
         self.n = int(n)
         self.uid = int(uid)          # scheduler-local admission rank: lane
         self.cancelled = False       # labels stay deterministic across runs
         edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if weights is not None:
+            weights = np.asarray(weights, np.float32).reshape(-1)
         labels = connected_components(edges, self.n)
         self.tasks, self.index_maps = [], []
         for k, c in enumerate(np.unique(labels)):
@@ -543,8 +581,10 @@ class GraphJob:
             remap[vs] = np.arange(vs.size)
             emask = labels[edges[:, 0]] == c
             ce = np.stack([remap[edges[emask, 0]], remap[edges[emask, 1]]], 1)
+            cw = weights[emask] if weights is not None else None
             self.tasks.append(_ComponentTask(ce, vs.size, cfg,
-                                             lane=f"{self.uid}.{k}"))
+                                             lane=f"{self.uid}.{k}",
+                                             weights=cw))
             self.index_maps.append(vs)
 
     @property
@@ -624,9 +664,9 @@ class WaveScheduler:
                  tracer: "obs_trace.Tracer | None" = None,
                  clock: Clock | None = None):
         cfg = cfg or LayoutConfig()
-        if cfg.engine != "multigila":
-            raise ValueError("WaveScheduler supports engine='multigila' "
-                             f"only, got {cfg.engine!r}")
+        if cfg.driver != "multigila":
+            raise ValueError("WaveScheduler supports driver='multigila' "
+                             f"only, got {cfg.driver!r}")
         if not cfg.bucketing:
             raise ValueError("WaveScheduler requires cfg.bucketing=True")
         self.cfg = cfg
@@ -648,14 +688,25 @@ class WaveScheduler:
         self.lane_dispatches = 0
         self.straggler_waves = 0
 
-    def admit(self, edges, n: int, *, seed: int | None = None) -> GraphJob:
-        """Add one graph to the lane set (legal at any wave boundary)."""
-        cfg = (self.cfg if seed is None
-               else dataclasses.replace(self.cfg, seed=int(seed)))
+    def admit(self, edges, n: int, *, seed: int | None = None,
+              engine: str | None = None, weights=None) -> GraphJob:
+        """Add one graph to the lane set (legal at any wave boundary).
+
+        ``engine`` overrides the scheduler config's refinement engine for
+        THIS job only: a wave may mix engines â€” grouping is by
+        ``bucketing.group_key``, which leads with the engine id, so mixed
+        waves dispatch one batched program per (engine, shape bucket) and
+        lanes stay bit-identical to dedicated runs. ``weights`` are the
+        job's per-edge weights."""
+        cfg = self.cfg
+        if seed is not None:
+            cfg = dataclasses.replace(cfg, seed=int(seed))
+        if engine is not None:
+            cfg = dataclasses.replace(cfg, engine=engine)
         # lane labels derive from the scheduler-local admission rank, not
         # any global counter â€” two fresh runs of the same script produce
         # identical labels (trace replay determinism, tests/test_obs.py)
-        job = GraphJob(edges, n, cfg, uid=self._next_uid)
+        job = GraphJob(edges, n, cfg, uid=self._next_uid, weights=weights)
         self._next_uid += 1
         self._jobs.append(job)
         return job
@@ -746,12 +797,16 @@ class WaveScheduler:
 
 
 def multigila_layout_many(graphs: list, cfg: LayoutConfig | None = None,
-                          *, seeds: list | None = None) -> list:
+                          *, seeds: list | None = None,
+                          engines: list | None = None,
+                          weights: list | None = None) -> list:
     """Batched multi-graph Multi-GiLA: lay out B graphs through grouped,
     vmapped per-level refinement steps (one device program per level wave).
 
-    ``graphs`` is a list of ``(edges, n)`` pairs; ``seeds`` optionally
-    overrides ``cfg.seed`` per graph. Returns ``[(pos[n, 2], LayoutStats)]``
+    ``graphs`` is a list of ``(edges, n)`` pairs; ``seeds`` / ``engines`` /
+    ``weights`` optionally override ``cfg.seed`` / ``cfg.engine`` / the
+    per-edge weights per graph (mixed-engine batches group by engine in
+    the bucket key). Returns ``[(pos[n, 2], LayoutStats)]``
     in input order. Coarsening and placement run per component (they are
     host-synchronized and cheap); every wave of per-level refinements is
     grouped by shape bucket (core/bucketing.py:group_key) and dispatched as
@@ -764,11 +819,15 @@ def multigila_layout_many(graphs: list, cfg: LayoutConfig | None = None,
     (serve/engine.py) drives the same scheduler with mid-flight admission.
     """
     cfg = cfg or LayoutConfig()
-    if seeds is not None and len(seeds) != len(graphs):
-        raise ValueError("seeds must match graphs in length")
-    sched = WaveScheduler(cfg)     # validates engine/bucketing
+    for name, lst in (("seeds", seeds), ("engines", engines),
+                      ("weights", weights)):
+        if lst is not None and len(lst) != len(graphs):
+            raise ValueError(f"{name} must match graphs in length")
+    sched = WaveScheduler(cfg)     # validates driver/bucketing
     jobs = [sched.admit(edges, n,
-                        seed=None if seeds is None else int(seeds[k]))
+                        seed=None if seeds is None else int(seeds[k]),
+                        engine=None if engines is None else engines[k],
+                        weights=None if weights is None else weights[k])
             for k, (edges, n) in enumerate(graphs)]
     sched.drain()
     return [job.result() for job in jobs]
@@ -776,17 +835,21 @@ def multigila_layout_many(graphs: list, cfg: LayoutConfig | None = None,
 
 def multigila_layout(edges: np.ndarray, n: int,
                      cfg: LayoutConfig | None = None, *,
-                     export: bool = False):
+                     export: bool = False, weights=None):
     """Full pipeline on a possibly-disconnected graph. Returns pos[n,2] (and
     the merged HierarchyExport when ``export=True`` â€” the serving layer's
-    input, see serve/tiles.py)."""
+    input, see serve/tiles.py). ``weights`` (float[m], optional) are the
+    per-edge weights (see ``layout_component``)."""
     cfg = cfg or LayoutConfig()
     edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if weights is not None:
+        weights = np.asarray(weights, np.float32).reshape(-1)
     labels = connected_components(edges, n)
     comps = np.unique(labels)
     stats = LayoutStats()
     if len(comps) == 1:
-        return layout_component(edges, n, cfg, export=export)
+        return layout_component(edges, n, cfg, export=export,
+                                weights=weights)
 
     layouts, index_maps, exports = [], [], []
     for c in comps:
@@ -795,7 +858,8 @@ def multigila_layout(edges: np.ndarray, n: int,
         remap[vs] = np.arange(vs.size)
         emask = labels[edges[:, 0]] == c
         ce = np.stack([remap[edges[emask, 0]], remap[edges[emask, 1]]], 1)
-        out = layout_component(ce, vs.size, cfg, export=export)
+        cw = weights[emask] if weights is not None else None
+        out = layout_component(ce, vs.size, cfg, export=export, weights=cw)
         p, s = out[0], out[1]
         if export:
             exports.append(out[2])

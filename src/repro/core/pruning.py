@@ -25,10 +25,14 @@ class PruneResult:
     leaves: np.ndarray      # int64[k] — original indices of pruned leaves
     leaf_host: np.ndarray   # int64[k] — original index of each leaf's host
     n_orig: int
+    ewt: np.ndarray | None = None  # float32[len(edges)] — surviving weights
 
 
-def prune_degree_one(edges: np.ndarray, n: int) -> PruneResult:
+def prune_degree_one(edges: np.ndarray, n: int,
+                     weights: np.ndarray | None = None) -> PruneResult:
     edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if weights is not None:
+        weights = np.asarray(weights, np.float32).reshape(-1)
     deg = np.zeros(n, dtype=np.int64)
     np.add.at(deg, edges[:, 0], 1)
     np.add.at(deg, edges[:, 1], 1)
@@ -55,7 +59,8 @@ def prune_degree_one(edges: np.ndarray, n: int) -> PruneResult:
     np.add.at(mass, new_of_old[hosts], 1.0)
     return PruneResult(edges=e2, n=int(old_of_new.size), mass=mass,
                        old_of_new=old_of_new, leaves=leaves, leaf_host=hosts,
-                       n_orig=n)
+                       n_orig=n,
+                       ewt=weights[~e_leaf] if weights is not None else None)
 
 
 def reinsert(pr: PruneResult, pos_kept: np.ndarray,

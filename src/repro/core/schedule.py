@@ -38,6 +38,7 @@ class LevelSchedule:
     mode: str            # "exact" | "neighbor" | "grid"
     grid_dim: int = 0    # G (grid mode only): G×G spatial cells
     cell_cap: int = 0    # bucket capacity per cell (grid mode only)
+    engine: str = "gila"  # refinement engine id (core/engine.py registry)
 
 
 def make_schedule(level: int, n_levels: int, n: int, m: int,
@@ -45,7 +46,8 @@ def make_schedule(level: int, n_levels: int, n: int, m: int,
                   grid_threshold: int = 32768,
                   coarsest_iters: int = 300, finest_iters: int = 50,
                   ideal_len: float = 1.0,
-                  n_pad: int | None = None) -> LevelSchedule:
+                  n_pad: int | None = None,
+                  engine: str = "gila") -> LevelSchedule:
     """level = 0 is the input graph; level = n_levels-1 is the coarsest.
 
     ``n_pad`` is the level's padded (bucketed) vertex count. The STATIC
@@ -77,6 +79,11 @@ def make_schedule(level: int, n_levels: int, n: int, m: int,
         # import path for consumers that never select grid mode
         from repro.kernels.grid_force import choose_grid
         grid_dim, cell_cap = choose_grid(n_pad if n_pad is not None else n)
-    return LevelSchedule(k=k, cap=cap, iters=max(iters, 10), temp0=temp0,
-                         temp_decay=0.985 if level == n_levels - 1 else 0.96,
-                         mode=mode, grid_dim=grid_dim, cell_cap=cell_cap)
+    sched = LevelSchedule(
+        k=k, cap=cap, iters=max(iters, 10), temp0=temp0,
+        temp_decay=0.985 if level == n_levels - 1 else 0.96,
+        mode=mode, grid_dim=grid_dim, cell_cap=cell_cap, engine=engine)
+    # give the engine its schedule hook (no-op for gila); deferred import
+    # so the schedule module stays importable without the engine stack
+    from repro.core.engine import get_engine
+    return get_engine(engine).tune(sched)

@@ -21,20 +21,26 @@ def save_edgelist(path: str, edges: np.ndarray) -> None:
 
 
 def _parse_chunk(lines: list[str]) -> np.ndarray:
-    # first two tokens per line (split stops after 3 — trailing weight
-    # columns never get tokenized); float64 since weights/ids arrive as text
-    toks = [ln.split(None, 2)[:2] for ln in lines]
-    return np.array(toks, dtype=np.float64).astype(np.int64)
+    # first three tokens per line (split stops after 4 — columns past the
+    # weight never get tokenized); float64 since weights/ids arrive as
+    # text. Lines shorter than the chunk's widest row pad with weight 1.
+    toks = [ln.split(None, 3)[:3] for ln in lines]
+    width = max(len(t) for t in toks)
+    if width > 1:
+        toks = [t + ["1"] * (width - len(t)) for t in toks]
+    return np.array(toks, dtype=np.float64)
 
 
-def load_edgelist(path: str) -> tuple[np.ndarray, int]:
+def load_edgelist(path: str, weights: bool = False):
     """Stream an edge list (or MatrixMarket ``.mtx``) → (edges[m, 2], n).
 
     * ``#`` and ``%`` lines are comments (``%%MatrixMarket`` included);
     * a MatrixMarket body is detected by its ``%%MatrixMarket`` banner:
       the first data line is the ``rows cols nnz`` size line (skipped) and
       entries are 1-based (shifted to 0-based);
-    * extra columns (weights) beyond the first two are ignored;
+    * with ``weights=True`` the return is ``(edges, n, w)`` where ``w`` is
+      the third column as float32 (1.0 where a line has no weight);
+      otherwise the weight column is parsed and dropped;
     * an empty file yields ``(int64[0, 2], 0)`` without warnings.
     """
     is_mtx = False
@@ -69,15 +75,29 @@ def load_edgelist(path: str) -> tuple[np.ndarray, int]:
     flush()
 
     if not chunks:
+        if weights:
+            return np.zeros((0, 2), np.int64), n_header, np.zeros(0, np.float32)
         return np.zeros((0, 2), np.int64), n_header
-    e = np.concatenate(chunks, axis=0)
-    if e.shape[1] == 1:
+    width = max(c.shape[1] for c in chunks)
+    if width > 1:
+        # normalize to one width: a chunk entirely of 2-column lines inside
+        # a weighted file pads with weight 1
+        chunks = [c if c.shape[1] == width else
+                  np.hstack([c, np.ones((len(c), width - c.shape[1]))])
+                  for c in chunks]
+    raw = np.concatenate(chunks, axis=0)
+    if raw.shape[1] == 1:
         # flat one-number-per-line files pair consecutive values, as the
         # old loadtxt(...).reshape(-1, 2) path did (odd counts still raise)
-        e = e.reshape(-1, 2)
+        raw = raw.reshape(-1, 2)
+    e = raw[:, :2].astype(np.int64)
+    w = (raw[:, 2].astype(np.float32) if raw.shape[1] > 2
+         else np.ones(len(raw), np.float32))
     if is_mtx:
         e -= 1
     n = int(e.max()) + 1 if e.size else 0
+    if weights:
+        return e, max(n, n_header), w
     return e, max(n, n_header)
 
 

@@ -39,7 +39,14 @@ def main(argv=None):
     ap.add_argument("--args", nargs="*", type=float, default=[20, 20])
     ap.add_argument("--engine", default="multigila",
                     choices=["multigila", "multigila_dist", "centralized",
-                             "flat"])
+                             "flat", "gila", "stress"],
+                    help="refinement engine (gila | stress); the driver "
+                         "names stay accepted for back-compat and select "
+                         "--driver instead (LayoutConfig shim)")
+    ap.add_argument("--driver", default=None,
+                    choices=["multigila", "multigila_dist", "centralized",
+                             "flat"],
+                    help="hierarchy driver (default multigila)")
     ap.add_argument("--mesh", default="",
                     help="multigila_dist mesh as DATAxMODEL, e.g. 4x2 "
                          "(default: one mesh over all local devices)")
@@ -67,6 +74,8 @@ def main(argv=None):
                   if args.mesh else None)
     cfg = LayoutConfig(engine=args.engine, seed=args.seed,
                        mesh_shape=mesh_shape)
+    if args.driver is not None:
+        cfg = dataclasses.replace(cfg, driver=args.driver)
 
     if args.many > 0:
         B = args.many

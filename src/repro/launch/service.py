@@ -8,8 +8,8 @@ always-on engine, requests joining the wave scheduler mid-flight
 
     PYTHONPATH=src python -m repro.launch.service --port 8080
 
-    POST /layout   {"edges": [[u, v], ...], "n": 123,
-                    "priority": 0, "deadline_s": 30.0, "seed": 7}
+    POST /layout   {"edges": [[u, v], ...], "n": 123, "priority": 0,
+                    "deadline_s": 30.0, "seed": 7, "engine": "stress"}
         → 200 {"rid", "pos": [[x, y], ...], "levels", "latency_s"}
         → 400 malformed graph            (validation at the boundary)
         → 429 admission queue full       (bounded-queue backpressure)
@@ -96,7 +96,8 @@ def make_server(svc, host: str = "127.0.0.1", port: int = 0,
                 req = svc.submit(
                     edges, n, priority=int(body.get("priority", 0)),
                     deadline_s=body.get("deadline_s"),
-                    seed=body.get("seed"))
+                    seed=body.get("seed"),
+                    engine=body.get("engine"))
             except ValueError as e:
                 self._json(400, {"error": str(e)})
                 return

@@ -105,6 +105,7 @@ class LayoutRequest:
     edges: np.ndarray
     n: int
     seed: int | None
+    engine: str | None              # refinement engine override (None = cfg's)
     priority: int
     deadline: float | None          # absolute, in the engine clock's frame
     t_submit: float
@@ -173,12 +174,22 @@ class EngineCore:
     # -- client surface (any thread) ------------------------------------------
     def submit(self, edges, n: int, *, priority: int = 0,
                deadline_s: float | None = None,
-               seed: int | None = None) -> LayoutRequest:
+               seed: int | None = None,
+               engine: str | None = None) -> LayoutRequest:
         """Enqueue one graph; raises ``EngineBusy`` when the admission
         queue is full (bounded-queue backpressure). ``deadline_s`` is
         relative to now; expiry resolves the future with
-        ``DeadlineExceeded``."""
+        ``DeadlineExceeded``. ``engine`` overrides the refinement engine
+        for this request (waves mix engines freely — grouping is by
+        (engine, shape bucket), DESIGN.md §14)."""
         e, n = validate_graph(edges, n)
+        if engine is not None:
+            # boundary validation: an unknown id must bounce here (HTTP
+            # 400), not poison the engine worker mid-wave. Deferred import
+            # mirrors the registry's own lazy stress import.
+            from repro.core.engine import get_engine
+            get_engine(engine)
+            engine = str(engine)
         t = self.clock.now()
         with self._lock:
             rid = self._next_rid
@@ -191,6 +202,7 @@ class EngineCore:
             req = LayoutRequest(
                 rid=rid, edges=e, n=n,
                 seed=None if seed is None else int(seed),
+                engine=engine,
                 priority=int(priority),
                 deadline=None if deadline_s is None else t + float(deadline_s),
                 t_submit=t, future=Future())
@@ -282,7 +294,8 @@ class EngineCore:
         # job construction = host-side coarsening; deliberately outside the
         # lock so concurrent submits never block on it
         for req in admits:
-            job = self.sched.admit(req.edges, req.n, seed=req.seed)
+            job = self.sched.admit(req.edges, req.n, seed=req.seed,
+                                   engine=req.engine)
             with self._lock:
                 req.job = job
                 req.status = "running"
@@ -530,12 +543,14 @@ class ContinuousLayoutService:
 
     def submit(self, edges, n: int, *, priority: int = 0,
                deadline_s: float | None = None,
-               seed: int | None = None) -> LayoutRequest:
+               seed: int | None = None,
+               engine: str | None = None) -> LayoutRequest:
         with self._lifecycle:
             if self._closed:
                 raise RuntimeError("service is closed")
             req = self.core.submit(edges, n, priority=priority,
-                                   deadline_s=deadline_s, seed=seed)
+                                   deadline_s=deadline_s, seed=seed,
+                                   engine=engine)
         self._wake.set()
         return req
 

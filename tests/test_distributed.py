@@ -360,6 +360,31 @@ def test_multigila_dist_engine_end_to_end():
     assert "OK" in out
 
 
+def test_multigila_dist_stress_engine_end_to_end():
+    """driver="multigila_dist" × engine="stress": every level refined by
+    the sharded maxent-stress superstep (its extra annealing scalar staged
+    per iteration) produces a finite layout that untangles the graph."""
+    out = run_sub("""
+        import numpy as np
+        from repro.graphs import generators as G
+        from repro.graphs.graph import build_graph
+        from repro.graphs.metrics import sampled_stress
+        from repro.core import multigila_layout, LayoutConfig
+        from repro.core.gila import random_init
+        edges, n = G.grid(18, 18)
+        pos, stats = multigila_layout(edges, n, LayoutConfig(
+            seed=0, driver="multigila_dist", engine="stress",
+            mesh_shape=(4, 2)))
+        assert np.isfinite(pos).all()
+        g = build_graph(edges, n)
+        p0 = np.asarray(random_init(g, 6.0, 0))[:n]
+        s0, s1 = sampled_stress(p0, edges, n), sampled_stress(pos, edges, n)
+        assert s1 < s0 * 0.5, (s0, s1)
+        print("OK", stats.levels, s0, s1)
+    """, extra_env={"JAX_TRANSFER_GUARD": "disallow"})
+    assert "OK" in out
+
+
 def test_layout_halo_step_runs():
     """§Perf hillclimb C: halo-exchange superstep compiles and matches the
     all-gather superstep when every neighbor is covered by the halo."""

@@ -53,6 +53,18 @@ def test_r2_distinguishes_ambient_from_free_name():
     assert "closes over 'cell_cap'" in msgs  # static not in the key tuple
 
 
+def test_r2_flags_unkeyed_engine_id():
+    """The engine seam's cache-safety contract: a cached-step key that
+    omits the engine id while the builder branches on it is under-keyed —
+    a warm stress pass would silently reuse the GiLA program."""
+    bad = lint_paths([str(FIXTURES / "r2_engine_bad.py")])
+    assert bad, "seeded unkeyed-engine violation not detected"
+    assert {f.rule for f in bad} == {"R2"}, bad
+    assert any("closes over 'engine'" in f.message for f in bad)
+    good = lint_paths([str(FIXTURES / "r2_engine_good.py")])
+    assert good == [], good
+
+
 def test_r5_needs_declared_axes():
     # without an axis universe only the arity check can fire
     findings = lint_paths([str(FIXTURES / "r5_bad.py")])
@@ -129,7 +141,8 @@ def test_full_audit_covers_all_families_and_passes():
     report = run_audit()
     fams = report["families"]
     assert set(fams) == {"refine_single", "refine_many", "dist_step",
-                         "merger", "coarsen"}
+                         "merger", "coarsen", "refine_single_stress",
+                         "refine_many_stress", "dist_step_stress"}
     for name, fam in fams.items():
         assert fam["failures"] == [], (name, fam["failures"])
         assert fam["entry"], name

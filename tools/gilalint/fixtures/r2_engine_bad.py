@@ -1,0 +1,27 @@
+"""R2 positive: cache key without the engine id.
+
+The builder dispatches on ``engine`` (the refinement-engine registry id,
+core/engine.py) but the key tuple carries only the shape/mode statics — a
+warm pass under a different engine would reuse the wrong compiled program.
+"""
+import os
+
+from repro.core.bucketing import CompileCache
+
+CACHE = CompileCache()
+
+
+def backend():
+    return os.environ.get("REPRO_PALLAS", "auto")
+
+
+def build(mode, engine):
+    def fn(x):
+        return x * 2 if engine == "stress" and mode and backend() else x
+    return fn
+
+
+def cached(n_pad, mode, engine):
+    key = ("refine", n_pad, mode, backend())
+    fn, fresh = CACHE.get(key, lambda: build(mode, engine))
+    return fn, fresh

@@ -1,0 +1,24 @@
+"""R2 negative: the engine id is a key component, like every other static
+the builder dispatches on (the production pattern of cached_refine /
+cached_refine_many after the engine-seam refactor)."""
+import os
+
+from repro.core.bucketing import CompileCache
+
+CACHE = CompileCache()
+
+
+def backend():
+    return os.environ.get("REPRO_PALLAS", "auto")
+
+
+def build(mode, engine):
+    def fn(x):
+        return x * 2 if engine == "stress" and mode and backend() else x
+    return fn
+
+
+def cached(n_pad, mode, engine):
+    key = ("refine", engine, n_pad, mode, backend())
+    fn, fresh = CACHE.get(key, lambda: build(mode, engine))
+    return fn, fresh

@@ -142,14 +142,14 @@ def _path_graph(n: int):
     return build_graph(edges, n, bucket=True)
 
 
-def _sched(n: int, n_pad: int):
+def _sched(n: int, n_pad: int, engine: str = "gila"):
     from repro.core.schedule import make_schedule
-    return make_schedule(0, 1, n, n - 1, n_pad=n_pad)
+    return make_schedule(0, 1, n, n - 1, n_pad=n_pad, engine=engine)
 
 
-# -- the three registered families --------------------------------------------
+# -- the registered families ---------------------------------------------------
 
-def _audit_single() -> dict:
+def _audit_single(engine: str = "gila") -> dict:
     """bucketing.cached_refine — the single-graph bucketed level step."""
     import jax
     import jax.numpy as jnp
@@ -163,7 +163,7 @@ def _audit_single() -> dict:
     # two true sizes, one 256-vertex bucket — the A4 pair
     for n in (70, 90):
         g = _path_graph(n)
-        sched = _sched(n, g.n_pad)
+        sched = _sched(n, g.n_pad, engine)
         pos0 = random_init(g, 1.0, seed=0)
         with io_boundary():
             nbr_idx = jnp.zeros((g.n_pad, 1), jnp.int32)
@@ -173,7 +173,7 @@ def _audit_single() -> dict:
         traced.append((n, key, jax.make_jaxpr(fn)(*args), args, sched))
 
     (_, key_a, jx_a, args, sched), (_, key_b, jx_b, _, _) = traced
-    facts = _check_program("refine_single", jx_a, failures)
+    facts = _check_program(f"refine_single[{engine}]", jx_a, failures)
     if key_a != key_b:
         failures.append({
             "rule": "A4",
@@ -187,7 +187,7 @@ def _audit_single() -> dict:
                        "on payload, not just the shape bucket"})
     with _donation_forced():
         fn2 = bucketing._build_refine(sched.mode, sched.grid_dim,
-                                      sched.cell_cap)
+                                      sched.cell_cap, engine=engine)
         if not _donates_arg0(fn2, *args):
             failures.append({
                 "rule": "A3",
@@ -197,7 +197,7 @@ def _audit_single() -> dict:
             "failures": failures, **facts}
 
 
-def _audit_many() -> dict:
+def _audit_many(engine: str = "gila") -> dict:
     """bucketing.cached_refine_many — the batched multi-graph lane step."""
     import jax
     import jax.numpy as jnp
@@ -211,7 +211,7 @@ def _audit_many() -> dict:
     # two true sizes, one 64-vertex/512-edge lane bucket
     for n in (40, 55):
         g = _path_graph(n)
-        sched = _sched(n, g.n_pad)
+        sched = _sched(n, g.n_pad, engine)
         pos0 = random_init(g, 1.0, seed=0)
         req = bucketing.make_request(g, pos0, sched, seed=0)
         with io_boundary():
@@ -222,7 +222,7 @@ def _audit_many() -> dict:
         traced.append((key, jax.make_jaxpr(fn)(*args), args, req))
 
     (key_a, jx_a, args, req), (key_b, jx_b, _, _) = traced
-    facts = _check_program("refine_many", jx_a, failures)
+    facts = _check_program(f"refine_many[{engine}]", jx_a, failures)
     if key_a != key_b:
         failures.append({
             "rule": "A4",
@@ -236,7 +236,7 @@ def _audit_many() -> dict:
     with _donation_forced():
         fn2 = bucketing._build_refine_many(
             req.sched.mode, req.sched.grid_dim, req.sched.cell_cap,
-            req.inc_k)
+            req.inc_k, engine=engine)
         if not _donates_arg0(fn2, *args):
             failures.append({
                 "rule": "A3",
@@ -246,7 +246,7 @@ def _audit_many() -> dict:
             "cache_key": repr(key_a), "failures": failures, **facts}
 
 
-def _audit_dist() -> dict:
+def _audit_dist(engine: str = "gila") -> dict:
     """distributed.cached_layout_step — the sharded level superstep.
 
     Traced through ShapeDtypeStructs (no allocation) on a host mesh over
@@ -272,13 +272,14 @@ def _audit_dist() -> dict:
             np.asarray(g.src), np.asarray(g.dst), np.asarray(g.emask),
             np.asarray(g.ewt), n_pad, vsize, bucket=True)
         jitted, _, _ = distributed.cached_layout_step(
-            mesh, n_pad, m_pad, 1, mode="exact")
-        specs = distributed.layout_step_specs(n_pad, m_pad, 1, mode="exact")
+            mesh, n_pad, m_pad, 1, mode="exact", engine=engine)
+        specs = distributed.layout_step_specs(n_pad, m_pad, 1, mode="exact",
+                                              engine=engine)
         args = tuple(specs.values())
         traced.append(((n_pad, m_pad), jax.make_jaxpr(jitted)(*args), args))
 
     (shape_a, jx_a, args), (shape_b, jx_b, _) = traced
-    facts = _check_program("dist_step", jx_a, failures)
+    facts = _check_program(f"dist_step[{engine}]", jx_a, failures)
     if shape_a != shape_b:
         failures.append({
             "rule": "A4",
@@ -292,7 +293,7 @@ def _audit_dist() -> dict:
                        "structurally different jaxprs"})
     with _donation_forced():
         step, _ = distributed.layout_train_step(
-            mesh, shape_a[0], shape_a[1], 1, mode="exact")
+            mesh, shape_a[0], shape_a[1], 1, mode="exact", engine=engine)
         jd = jax.jit(
             step,
             donate_argnums=bucketing.donate_argnums_if_supported(0))
@@ -422,6 +423,11 @@ FAMILIES = (
     ("dist_step", _audit_dist),
     ("merger", _audit_merger),
     ("coarsen", _audit_coarsen),
+    # the stress engine's step family: same staging entry points, engine id
+    # widened into the cache key (see core/engine.py)
+    ("refine_single_stress", lambda: _audit_single("stress")),
+    ("refine_many_stress", lambda: _audit_many("stress")),
+    ("dist_step_stress", lambda: _audit_dist("stress")),
 )
 
 
